@@ -1,0 +1,111 @@
+"""Shared benchmark utilities: paper-regime data builders + runners.
+
+Every figure benchmark reproduces one experiment of the paper on the
+MNIST-proxy generator (DESIGN.md data gate) and reports the figure's
+qualitative claim as a derived metric.  ``--fast`` shrinks repeat counts,
+not the experimental structure.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.core import csvm, dsvm, dtsvm, graph          # noqa: E402
+from repro.data import synthetic                          # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+# Paper Section IV defaults
+C = 0.01
+ETA1 = ETA2 = 1.0
+
+
+def build(V, n_per_task, *, T=None, degree=0.8, graph_kind="random",
+          n_test=1800, relatedness=0.9, noise=1.0, pos_frac=None, seed=0):
+    """n_per_task: list of TOTAL training samples per task (paper style —
+    split evenly over nodes)."""
+    T = T or len(n_per_task)
+    n_train = np.zeros((V, T), int)
+    for t, n in enumerate(n_per_task):
+        n_train[:, t] = synthetic.split_counts(n, V)
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n_train, n_test=n_test,
+        relatedness=relatedness, noise=noise, pos_frac=pos_frac, seed=seed)
+    A = graph.make_graph(graph_kind, V, degree=degree, seed=seed)
+    return data, A
+
+
+def risk_eval(data, V, T):
+    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
+                           (V, T) + data["X_test"].shape[1:])
+    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
+                           (V, T) + data["y_test"].shape[1:])
+    return lambda st: dtsvm.risks(st.r, Xte, yte)
+
+
+def run_dtsvm(data, A, iters, *, eps1=1.0, eps2=1.0, C_=C, qp_iters=100,
+              active=None, couple=None, with_history=True, state=None):
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A, C=C_,
+                              eps1=eps1, eps2=eps2, eta1=ETA1, eta2=ETA2,
+                              active=active, couple=couple)
+    V, T = prob.X.shape[:2]
+    ev = risk_eval(data, V, T) if with_history else None
+    t0 = time.time()
+    st, hist = dtsvm.run_dtsvm(prob, iters, qp_iters=qp_iters,
+                               eval_fn=ev, state=state)
+    jax.block_until_ready(st.r)
+    dt = time.time() - t0
+    return st, (np.asarray(hist) if hist is not None else None), dt, prob
+
+
+def run_dsvm(data, A, iters, *, eps2=1.0, C_=C, qp_iters=100,
+             active=None, with_history=True):
+    prob = dsvm.make_dsvm_problem(data["X"], data["y"], data["mask"], A,
+                                  C=C_, eps2=eps2, active=active)
+    V, T = prob.X.shape[:2]
+    ev = risk_eval(data, V, T) if with_history else None
+    t0 = time.time()
+    st, hist = dtsvm.run_dtsvm(prob, iters, qp_iters=qp_iters, eval_fn=ev)
+    jax.block_until_ready(st.r)
+    dt = time.time() - t0
+    return st, (np.asarray(hist) if hist is not None else None), dt, prob
+
+
+def run_csvm_per_task(data, *, C_scale=1.0, qp_iters=600):
+    """Pooled centralized SVM per task."""
+    V, T, N, p = data["X"].shape
+    out = []
+    for t in range(T):
+        Xp = data["X"][:, t].reshape(-1, p)
+        yp = data["y"][:, t].reshape(-1)
+        mp = data["mask"][:, t].reshape(-1)
+        w, b = csvm.csvm_fit(jnp.asarray(Xp), jnp.asarray(yp),
+                             C * C_scale, jnp.asarray(mp), qp_iters=qp_iters)
+        out.append(float(csvm.csvm_risk(
+            w, b, jnp.asarray(data["X_test"][t]),
+            jnp.asarray(data["y_test"][t]))))
+    return out
+
+
+def write_csv(name: str, header: str, rows):
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, name)
+    with open(path, "w") as f:
+        f.write(header + "\n")
+        for r in rows:
+            f.write(",".join(str(x) for x in r) + "\n")
+    return path
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    """The run.py contract: ``name,us_per_call,derived`` CSV on stdout."""
+    print(f"{name},{us_per_call:.1f},{derived}", flush=True)

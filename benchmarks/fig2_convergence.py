@@ -1,0 +1,69 @@
+"""Fig. 2 — evolution of global risks: DTSVM vs DSVM vs CSVM on two
+networks (20 nodes / degree 0.64 and 10 nodes / degree 0.89).
+
+Task 1 (target) has 200 training samples total, Task 3 (source) 800;
+1800 test samples; C=0.01, eps1=eps2=eta1=eta2=1 — the paper's setup.
+Claim validated: DTSVM's converged target risk <= DSVM and CSVM, and the
+target task benefits more than the source.
+"""
+import argparse
+
+import numpy as np
+
+from common import build, emit, run_csvm_per_task, run_dsvm, run_dtsvm, \
+    write_csv
+
+
+def run(fast: bool = False, seeds=(0, 1, 2, 3)):
+    """Two regimes per network: the paper's counts (200 target samples) and
+    a scarce variant (40) — on the synthetic proxy, 200 samples saturate a
+    10-d linear task (consensus already pools them across nodes), so the
+    transfer effect concentrates in the scarce regime; DESIGN.md §1."""
+    iters = 40 if fast else 100
+    seeds = seeds[:2] if fast else seeds
+    nets = [("net1_V20_deg0.64_n200", 20, 0.6368, 200),
+            ("net2_V10_deg0.89_n200", 10, 0.8889, 200),
+            ("net1_V20_deg0.64_n40", 20, 0.6368, 40),
+            ("net2_V10_deg0.89_n40", 10, 0.8889, 40)]
+    rows = []
+    summary = {}
+    for name, V, deg, n_tgt in nets:
+        h_t, h_d, csv_r, times = [], [], [], []
+        for seed in seeds:
+            data, A = build(V, [n_tgt, 800], degree=deg, seed=seed,
+                            noise=1.0, relatedness=0.93)
+            st_t, hist_t, dt_t, _ = run_dtsvm(data, A, iters)
+            st_d, hist_d, dt_d, _ = run_dsvm(data, A, iters)
+            h_t.append(hist_t.mean(1))      # (iters, T) global risk
+            h_d.append(hist_d.mean(1))
+            csv_r.append(run_csvm_per_task(data))
+            times.append(dt_t / iters)
+        h_t = np.mean(h_t, 0)
+        h_d = np.mean(h_d, 0)
+        csv_r = np.mean(csv_r, 0)
+        for i in range(iters):
+            rows.append([name, i, h_t[i, 0], h_t[i, 1], h_d[i, 0],
+                         h_d[i, 1], csv_r[0], csv_r[1]])
+        summary[name] = dict(
+            dtsvm_t1=h_t[-1, 0], dsvm_t1=h_d[-1, 0], csvm_t1=csv_r[0],
+            dtsvm_t3=h_t[-1, 1], dsvm_t3=h_d[-1, 1], csvm_t3=csv_r[1],
+            iter_s=float(np.mean(times)))
+    write_csv("fig2_convergence.csv",
+              "network,iter,dtsvm_task1,dtsvm_task3,dsvm_task1,dsvm_task3,"
+              "csvm_task1,csvm_task3", rows)
+    return summary
+
+
+def main(fast=False):
+    s = run(fast)
+    for name, v in s.items():
+        gain = v["dsvm_t1"] - v["dtsvm_t1"]
+        emit(f"fig2_{name}", v["iter_s"] * 1e6,
+             f"target_risk dtsvm={v['dtsvm_t1']:.3f} dsvm={v['dsvm_t1']:.3f} "
+             f"csvm={v['csvm_t1']:.3f} transfer_gain={gain:+.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(ap.parse_args().fast)

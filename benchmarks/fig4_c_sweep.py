@@ -1,0 +1,47 @@
+"""Fig. 4 — converged global risks over the (C, eps2) grid (eps1=1).
+
+Same data regime as Fig. 3.  Claim: C trades margin vs error penalty;
+performance needs joint tuning of C and eps2.
+"""
+import argparse
+
+import numpy as np
+
+from common import build, emit, run_dtsvm, write_csv
+
+
+def run(fast: bool = False):
+    c_grid = [0.001, 0.01, 0.1] if not fast else [0.01]
+    e2_grid = [0.1, 1.0, 10.0, 100.0] if not fast else [1.0, 10.0]
+    seeds = range(2 if fast else 5)
+    iters = 30 if fast else 60
+    rows, risks, per_iter = [], {}, []
+    for c in c_grid:
+        for e2 in e2_grid:
+            acc = []
+            for seed in seeds:
+                data, A = build(10, [50, 400], degree=0.8667, seed=seed)
+                st, hist, dt, _ = run_dtsvm(data, A, iters, eps2=e2, C_=c)
+                acc.append(hist[-1].mean(0))
+                per_iter.append(dt / iters)
+            m = np.mean(acc, 0)
+            risks[(c, e2)] = m
+            rows.append([c, e2, m[0], m[1]])
+    write_csv("fig4_c_sweep.csv", "C,eps2,risk_task1,risk_task3", rows)
+    return risks, float(np.mean(per_iter))
+
+
+def main(fast=False):
+    risks, it_s = run(fast)
+    t1 = {k: v[0] for k, v in risks.items()}
+    best = min(t1, key=t1.get)
+    worst = max(t1, key=t1.get)
+    emit("fig4_c_sweep", it_s * 1e6,
+         f"best(C,eps2)={best} risk={t1[best]:.3f} worst={worst} "
+         f"risk={t1[worst]:.3f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(ap.parse_args().fast)

@@ -1,0 +1,167 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ dry-run style: production meshes need the placeholder devices before
+# any jax initialization.
+
+"""§Perf hillclimb driver — lowers named VARIANTS of the three selected
+(arch x shape) pairs, re-derives the roofline terms per variant, and
+appends everything to results/hillclimb.jsonl.
+
+    PYTHONPATH=src python benchmarks/hillclimb.py [--pair pair1] [--variant x]
+"""
+import argparse
+import json
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.core.consensus import ConsensusConfig
+from repro.dist import sharding as shp
+from repro.launch import costs as costs_lib
+from repro.launch import dryrun
+from repro.launch import mesh as mesh_lib
+from repro.models import model as model_lib
+from repro.train import steps as steps_lib
+
+RESULTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "results")
+
+
+def lower_train(arch, shape_name, mesh, *, cfg_overrides=None, microbatch=0,
+                mode="allreduce", every=1, kw_grad_rs=False):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    data_specs = model_lib.input_specs(cfg, shape)
+
+    def ns(t):
+        return shp.named(mesh, t)
+
+    if mode == "admm":
+        state_shapes = steps_lib.consensus_state_specs(cfg, mesh, shape)
+        st_spec = steps_lib.ConsensusTrainState(
+            params=jax.tree.map(lambda _: P("data"), state_shapes.params),
+            opt=jax.tree.map(lambda _: P("data"), state_shapes.opt),
+            dual=jax.tree.map(lambda _: P("data"), state_shapes.dual),
+            step=P())
+        step = steps_lib.make_consensus_train_step(
+            cfg, mesh, ConsensusConfig(every=every))
+        in_sh = (ns(st_spec),
+                 ns(shp.data_specs(data_specs, mesh, shape.global_batch)))
+        lowered = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,)
+                          ).lower(state_shapes, data_specs)
+    else:
+        state_shapes = steps_lib.train_state_specs(cfg, shape)
+        state_spec = shp.param_specs(state_shapes, mesh, shp.ctx_for(cfg))
+        gspec = state_spec["params"] if kw_grad_rs else None
+        step = steps_lib.make_train_step(cfg, microbatch=microbatch,
+                                         grad_specs=gspec)
+        in_sh = (ns(state_spec),
+                 ns(shp.data_specs(data_specs, mesh, shape.global_batch)))
+        lowered = jax.jit(step, in_shardings=in_sh,
+                          out_shardings=(ns(state_spec), None),
+                          donate_argnums=(0,)).lower(state_shapes, data_specs)
+    return cfg, shape, lowered
+
+
+def measure(arch, shape_name, name, **kw):
+    mesh = mesh_lib.make_production_mesh(multi_pod=False)
+    t0 = time.time()
+    with jax.set_mesh(mesh):
+        cfg, shape, lowered = lower_train(arch, shape_name, mesh, **kw)
+        compiled = lowered.compile()
+        mem = dryrun._mem_dict(compiled.memory_analysis())
+        n_scan = cfg.num_layers - (cfg.first_k_dense if cfg.is_moe else 0)
+        coll = dryrun.collective_bytes(compiled.as_text(),
+                                       loop_multiplier=max(n_scan, 1))
+    ac = costs_lib.step_costs(cfg, shape)
+    chips = mesh.devices.size
+    t_comp = ac.flops / chips / mesh_lib.PEAK_FLOPS_BF16
+    t_mem = ac.hbm_bytes / chips / mesh_lib.HBM_BW
+    t_coll = coll["total_bytes"] / (4 * mesh_lib.ICI_BW_PER_LINK)
+    # every-k consensus: the exchange appears in the HLO every step but
+    # executes 1/k of the time — amortize
+    if kw.get("mode") == "admm" and kw.get("every", 1) > 1:
+        t_coll_amort = t_coll / kw["every"]
+    else:
+        t_coll_amort = t_coll
+    rec = {
+        "pair": f"{arch}x{shape_name}", "variant": name,
+        "compile_s": round(time.time() - t0, 1),
+        "temp_gib": mem.get("temp_size_in_bytes", 0) / 2**30,
+        "args_gib": mem.get("argument_size_in_bytes", 0) / 2**30,
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_collective_s": t_coll_amort,
+        "coll_bytes": coll["total_bytes"],
+        "coll_per_op": coll["bytes_per_op"],
+        "dominant": max(("compute", t_comp), ("memory", t_mem),
+                        ("collective", t_coll_amort),
+                        key=lambda x: x[1])[0],
+    }
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "hillclimb.jsonl"), "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    print(f"[{rec['pair']} / {name}] temp={rec['temp_gib']:.1f}GiB "
+          f"args={rec['args_gib']:.1f}GiB compute={t_comp:.3f}s "
+          f"mem={t_mem:.4f}s coll={t_coll_amort:.3f}s "
+          f"dom={rec['dominant']} (compile {rec['compile_s']}s)", flush=True)
+    return rec
+
+
+PAIRS = {
+    # pair 1: worst memory residency
+    "pair1": ("qwen2.5-32b", "train_4k", [
+        ("baseline", {}),
+        ("chunked_ce", {"cfg_overrides": {"chunked_ce": True}}),
+        ("microbatch4", {"microbatch": 4}),
+        ("chunked_ce+mb4", {"cfg_overrides": {"chunked_ce": True},
+                            "microbatch": 4}),
+        ("mb4+grad_rs", {"microbatch": 4, "kw_grad_rs": True}),
+    ]),
+    # pair 2: most collective-bound
+    "pair2": ("deepseek-v2-236b", "train_4k", [
+        ("baseline", {}),
+        ("chunked_ce", {"cfg_overrides": {"chunked_ce": True}}),
+        ("cap1.0", {"cfg_overrides": {"moe_capacity_factor": 1.0}}),
+        ("cap1.0+chunked_ce", {"cfg_overrides": {
+            "moe_capacity_factor": 1.0, "chunked_ce": True}}),
+        ("grad_rs", {"kw_grad_rs": True}),
+        ("grad_rs+mb4", {"kw_grad_rs": True, "microbatch": 4}),
+    ]),
+    # pair 3: the paper's technique vs standard data parallel
+    "pair3": ("qwen2-0.5b", "train_4k", [
+        ("allreduce_baseline", {}),
+        ("admm_every1", {"mode": "admm", "every": 1}),
+        ("admm_every4", {"mode": "admm", "every": 4}),
+    ]),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--pair", default="all")
+    ap.add_argument("--variant", default="all")
+    args = ap.parse_args()
+    for pname, (arch, shape, variants) in PAIRS.items():
+        if args.pair != "all" and args.pair != pname:
+            continue
+        for vname, kw in variants:
+            if args.variant != "all" and args.variant != vname:
+                continue
+            try:
+                measure(arch, shape, vname, **kw)
+            except Exception as e:
+                print(f"[{pname}/{vname}] FAILED: {type(e).__name__}: {e}",
+                      flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Microbenchmarks of the paper's compute hot spots: the weighted-Gram
+Hessian build and the fused QP step (jnp execution path — the Pallas
+kernels target TPU and are validated separately in interpret mode)."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+from repro.kernels import ref
+
+
+def _time(fn, *args, iters=20):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / iters
+
+
+def main(fast=False):
+    rng = np.random.default_rng(0)
+    for n, d in [(128, 11), (512, 11), (1024, 64)]:
+        Z = jnp.asarray(rng.normal(size=(n, d)), jnp.float32)
+        a = jnp.asarray(rng.uniform(0.1, 2, size=(d,)), jnp.float32)
+        f = jax.jit(ref.weighted_gram)
+        dt = _time(f, Z, a, iters=5 if fast else 30)
+        flops = 2 * n * n * d
+        emit(f"gram_N{n}_D{d}", dt * 1e6,
+             f"gflops={flops/dt/1e9:.2f}")
+    for n in [128, 512, 1024]:
+        A = rng.normal(size=(n, n)).astype(np.float32)
+        K = jnp.asarray(A @ A.T / n)
+        q = jnp.asarray(rng.normal(size=n), jnp.float32)
+        hi = jnp.ones((n,), jnp.float32)
+        lam = jnp.zeros((n,), jnp.float32)
+        f = jax.jit(lambda l, K, q, h: ref.qp_pg_step(l, K, q, h, 0.1))
+        dt = _time(f, lam, K, q, hi, iters=5 if fast else 30)
+        emit(f"qp_step_N{n}", dt * 1e6,
+             f"gflops={2*n*n/dt/1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,134 @@
+"""Roofline analysis (deliverable g) — reads the dry-run JSONL and derives
+the three roofline terms per (arch x shape x mesh):
+
+    compute    = HLO_FLOPs_per_device / peak_FLOP/s        [s]
+    memory     = HLO_bytes_per_device / HBM_bw             [s]
+    collective = collective_bytes_per_device / ICI_bw      [s]
+
+cost_analysis() reports per-device (post-SPMD) numbers; collective bytes
+were parsed from the partitioned HLO (operand sums).  MODEL_FLOPS uses
+6*N*D (dense) / 6*N_active*D (MoE) with D = tokens processed, compared
+against total HLO FLOPs (chips x per-device) to expose remat/redundancy
+waste.
+
+Writes results/roofline.csv + a markdown table, and prints a run.py CSV
+row per mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from common import RESULTS, emit, write_csv            # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16  # noqa: E402
+
+# each v5e chip has ~4 usable ICI links on a 2D torus; collectives use all
+ICI_BW_PER_CHIP = 4 * ICI_BW_PER_LINK
+
+
+def load_records(path: str):
+    """Last record wins per (arch, shape, mesh, mode)."""
+    recs = {}
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            r = json.loads(line)
+            recs[(r["arch"], r["shape"], r["mesh"], r.get("mode",
+                                                          "allreduce"))] = r
+    return list(recs.values())
+
+
+def analyze(rec):
+    if rec["status"] != "ok":
+        return None
+    chips = rec["chips"]
+    an = rec.get("analytic", {})
+    # PRIMARY source: the analytic cost model (repro.launch.costs) — XLA's
+    # cost_analysis counts while bodies once (probe in EXPERIMENTS §Dry-run)
+    # so the raw HLO numbers undercount by ~num_layers; they stay recorded
+    # as a diagnostic.
+    flops_dev = an.get("flops", 0.0) / chips
+    bytes_dev = an.get("hbm_bytes", 0.0) / chips
+    coll_total = rec["collectives"]["total_bytes"]
+    # one SPMD program: every device sends ~the parsed (loop-multiplied)
+    # operand bytes, so per-device collective traffic = the parsed sum
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_total / ICI_BW_PER_CHIP
+    dom = max(("compute", t_compute), ("memory", t_memory),
+              ("collective", t_coll), key=lambda kv: kv[1])[0]
+    # 6ND for train (fwd+bwd), 2ND for single-forward steps
+    nd_factor = 6.0 if rec.get("step_kind") == "train" else 2.0
+    model_flops = nd_factor * rec["active_params"] * rec["tokens"]
+    useful = model_flops / an["flops"] if an.get("flops") else 0.0
+    hlo_total = rec["flops"] * chips
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "mode": rec.get("mode", "allreduce"),
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dom,
+        "model_flops": model_flops, "hlo_flops_total": hlo_total,
+        "useful_ratio": useful,
+        "hbm_gib": rec["memory"].get("temp_size_in_bytes", 0) / 2**30 +
+                   rec["memory"].get("argument_size_in_bytes", 0) / 2**30,
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp",
+                    default=os.path.join(RESULTS, "dryrun.jsonl"))
+    ap.add_argument("--md", default=os.path.join(RESULTS, "roofline.md"))
+    args = ap.parse_args(argv)
+    if not os.path.exists(args.inp):
+        emit("roofline", 0.0, "SKIPPED: no dryrun.jsonl (run "
+             "python -m repro.launch.dryrun first)")
+        return []
+
+    rows, md = [], []
+    analyzed = []
+    for rec in sorted(load_records(args.inp),
+                      key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if rec["status"] == "skipped":
+            md.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                      f"— | — | — | skipped: {rec['reason'][:40]} | — | — |")
+            continue
+        a = analyze(rec)
+        if a is None:
+            md.append(f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+                      f"— | — | — | ERROR | — | — |")
+            continue
+        analyzed.append(a)
+        rows.append([a["arch"], a["shape"], a["mesh"], a["mode"],
+                     f"{a['t_compute_s']:.3e}", f"{a['t_memory_s']:.3e}",
+                     f"{a['t_collective_s']:.3e}", a["dominant"],
+                     f"{a['useful_ratio']:.3f}", f"{a['hbm_gib']:.2f}"])
+        md.append(f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+                  f"{a['t_compute_s']:.2e} | {a['t_memory_s']:.2e} | "
+                  f"{a['t_collective_s']:.2e} | **{a['dominant']}** | "
+                  f"{a['useful_ratio']:.2f} | {a['hbm_gib']:.1f} |")
+    write_csv("roofline.csv",
+              "arch,shape,mesh,mode,t_compute_s,t_memory_s,t_collective_s,"
+              "dominant,useful_flops_ratio,hbm_gib", rows)
+    with open(args.md, "w") as f:
+        f.write("| arch | shape | mesh | compute [s] | memory [s] | "
+                "collective [s] | dominant | 6ND/HLO | HBM GiB |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|\n")
+        f.write("\n".join(md) + "\n")
+
+    n_dom = {}
+    for a in analyzed:
+        n_dom[a["dominant"]] = n_dom.get(a["dominant"], 0) + 1
+    emit("roofline", 0.0,
+         f"{len(analyzed)} combos analyzed; dominant terms: {n_dom}")
+    return analyzed
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""Benchmark orchestrator — one function per paper figure/table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Default is fast mode
+(reduced repeat counts, same experimental structure); pass --full for
+paper-scale repeats.
+"""
+import argparse
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale repeats (slow on 1 CPU core)")
+    ap.add_argument("--only", default="",
+                    help="comma-separated benchmark names to run")
+    args = ap.parse_args()
+    fast = not args.full
+
+    import fig2_convergence
+    import fig3_eps_sweep
+    import fig4_c_sweep
+    import fig5_unbalanced
+    import fig6_mixed
+    import fig7_online
+    import kernels_bench
+    import roofline
+
+    benches = {
+        "fig2": fig2_convergence.main,
+        "fig3": fig3_eps_sweep.main,
+        "fig4": fig4_c_sweep.main,
+        "fig5": fig5_unbalanced.main,
+        "fig6": fig6_mixed.main,
+        "fig7": fig7_online.main,
+        "kernels": kernels_bench.main,
+        "roofline": lambda fast: roofline.main([]),
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if only and name not in only:
+            continue
+        try:
+            fn(fast)
+        except Exception as e:
+            failures += 1
+            print(f"{name},0.0,ERROR {type(e).__name__}: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,58 @@
+"""Quickstart: consensus-based distributed transfer SVM in ~40 lines.
+
+Two related binary tasks spread over a 10-node network; the target task
+has 40 training samples TOTAL (4 per node), the source task 600.  DTSVM
+transfers knowledge through the consensus constraints — no data ever
+leaves a node — and beats per-task distributed SVM (DSVM) on the target.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import numpy as np
+
+from repro.core import dsvm, dtsvm, graph
+from repro.data import synthetic
+
+
+def main():
+    V, T = 10, 2
+    n_train = np.zeros((V, T), int)
+    n_train[:, 0] = synthetic.split_counts(40, V)    # scarce target task
+    n_train[:, 1] = synthetic.split_counts(600, V)   # rich source task
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n_train, n_test=1800,
+        relatedness=0.92, noise=1.0, seed=0)
+    adj = graph.make_graph("random", V, degree=0.8, seed=0)
+
+    import jax.numpy as jnp
+    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
+                           (V, T) + data["X_test"].shape[1:])
+    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
+                           (V, T) + data["y_test"].shape[1:])
+
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], adj,
+                              C=0.01, eps1=1.0, eps2=1.0)
+    state, _ = dtsvm.run_dtsvm(prob, iters=60, qp_iters=100)
+    r_dtsvm = np.asarray(dtsvm.risks(state.r, Xte, yte)).mean(0)
+
+    prob_d = dsvm.make_dsvm_problem(data["X"], data["y"], data["mask"], adj,
+                                    C=0.01)
+    state_d, _ = dtsvm.run_dtsvm(prob_d, iters=60, qp_iters=100)
+    r_dsvm = np.asarray(dtsvm.risks(state_d.r, Xte, yte)).mean(0)
+
+    print(f"target task:  DTSVM risk={r_dtsvm[0]:.3f}   "
+          f"DSVM risk={r_dsvm[0]:.3f}   (transfer gain "
+          f"{r_dsvm[0] - r_dtsvm[0]:+.3f})")
+    print(f"source task:  DTSVM risk={r_dtsvm[1]:.3f}   "
+          f"DSVM risk={r_dsvm[1]:.3f}")
+    tr, nr = dtsvm.consensus_residuals(state, prob)
+    print(f"consensus residuals: task={float(tr):.2e} node={float(nr):.2e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Batched serving demo: prefill + KV-cache greedy decode.
+
+Drives the same prefill/decode step functions the multi-pod dry run lowers
+— here on CPU with a reduced gemma2 (sliding-window + softcap paths) and a
+reduced zamba2 (hybrid SSM + shared-attention cache paths).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+from repro.launch import serve as serve_lib
+
+
+def main():
+    for arch in ["gemma2-2b", "zamba2-1.2b"]:
+        print(f"== {arch} (reduced) ==")
+        serve_lib.main(["--arch", arch, "--reduced", "--batch", "4",
+                        "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: consensus-based distributed transfer SVM + multi-arch JAX framework."""
+__version__ = "0.1.0"

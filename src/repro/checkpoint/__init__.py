@@ -1,0 +1,7 @@
+from repro.checkpoint.msgpack_ckpt import (  # noqa: F401
+    latest_step,
+    load,
+    restore_latest,
+    save,
+    save_step,
+)

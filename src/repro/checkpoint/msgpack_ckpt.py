@@ -1,0 +1,95 @@
+"""Msgpack-based pytree checkpointing (orbax is not available offline).
+
+Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
+encoded as nested dicts/lists/tuples.  Writes are atomic (tmp + rename) and
+a ``step`` index file tracks the latest checkpoint for resume.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+_ARR = "__arr__"
+_TUP = "__tup__"
+
+
+def _np_dtype(name: str) -> np.dtype:
+    try:
+        return np.dtype(name)
+    except TypeError:
+        import ml_dtypes  # bfloat16 / fp8 names (shipped with jax)
+        return np.dtype(getattr(ml_dtypes, name))
+
+
+def _encode(obj: Any):
+    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+        arr = np.asarray(obj)
+        return {_ARR: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
+                "data": arr.tobytes()}
+    if isinstance(obj, dict):
+        return {k: _encode(v) for k, v in obj.items()}
+    if isinstance(obj, tuple):
+        return {_TUP: [_encode(v) for v in obj]}
+    if isinstance(obj, list):
+        return [_encode(v) for v in obj]
+    if isinstance(obj, (int, float, str, bool)) or obj is None:
+        return obj
+    if hasattr(obj, "_asdict"):  # NamedTuple
+        return {_TUP: [_encode(v) for v in obj]}
+    raise TypeError(f"cannot serialize {type(obj)}")
+
+
+def _decode(obj: Any):
+    if isinstance(obj, dict):
+        if obj.get(_ARR):
+            arr = np.frombuffer(obj["data"], dtype=_np_dtype(obj["dtype"]))
+            return jnp.asarray(arr.reshape(obj["shape"]))
+        if _TUP in obj:
+            return tuple(_decode(v) for v in obj[_TUP])
+        return {k: _decode(v) for k, v in obj.items()}
+    if isinstance(obj, list):
+        return [_decode(v) for v in obj]
+    return obj
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    payload = msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True)
+    fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
+    with os.fdopen(fd, "wb") as f:
+        f.write(payload)
+    os.replace(tmp, path)
+
+
+def load(path: str) -> Any:
+    with open(path, "rb") as f:
+        return _decode(msgpack.unpackb(f.read(), raw=False))
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any) -> str:
+    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack")
+    save(path, tree)
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(str(step))
+    return path
+
+
+def latest_step(ckpt_dir: str):
+    p = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return int(f.read().strip())
+
+
+def restore_latest(ckpt_dir: str):
+    step = latest_step(ckpt_dir)
+    if step is None:
+        return None, None
+    return step, load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack"))

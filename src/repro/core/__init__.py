@@ -1,0 +1,11 @@
+# The paper's primary contribution: DTSVM (Prop. 1) + consensus substrate.
+from repro.core import (  # noqa: F401
+    consensus,
+    csvm,
+    dsvm,
+    dtsvm,
+    dtsvm_dist,
+    graph,
+    multitask,
+    qp,
+)

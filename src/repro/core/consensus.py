@@ -1,0 +1,100 @@
+"""The paper's ADMM-consensus pattern as a distributed optimizer for
+arbitrary pytrees (deep networks) — the bridge from DTSVM to the assigned
+architectures (DESIGN.md §3).
+
+Mapping of Prop. 1 onto SGD-family training:
+
+- each data-parallel group v keeps a *local* replica r_v of the consensus-
+  managed parameters plus a dual variable beta_v (eq. 9's multiplier);
+- the r-minimization (eq. 25 / Lemma 2) is approximated by gradient steps
+  on the ADMM-augmented loss; at the current iterate its gradient is
+
+      g_total = g_loss + 2*beta_v + eta * sum_{u in B_v} (r_v - r_u)
+
+- after the step, the dual ascends exactly as eq. (9):
+
+      beta_v += eta/2 * sum_{u in B_v} (r_v - r_u)
+
+- ONLY decision variables (parameters) cross node boundaries — never data,
+  never gradients — the paper's privacy/communication property.
+
+The neighbor sum is a ring ``ppermute`` over the ``data`` mesh axis (the
+native ICI pattern).  ``every=k`` runs the exchange every k steps
+(beyond-paper: cuts the collective roofline term by k; EXPERIMENTS §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ConsensusConfig(NamedTuple):
+    eta: float = 0.05
+    every: int = 1          # exchange every k steps (k>1 = beyond-paper)
+    axis: str = "data"      # mesh axis carrying the node graph (ring)
+
+
+class ConsensusState(NamedTuple):
+    dual: Any               # beta_v — same structure as managed params
+    step: jnp.ndarray
+
+
+def init_state(params) -> ConsensusState:
+    return ConsensusState(
+        dual=jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        step=jnp.zeros((), jnp.int32))
+
+
+def ring_neighbor_sum(params, axis: str):
+    """sum_{u in B_v} r_u for the ring topology (|B_v| = 2).  Must be called
+    inside shard_map/pmap over ``axis``."""
+    n = jax.lax.psum(1, axis)
+    fwd = [(i, (i + 1) % n) for i in range(n)]
+    bwd = [(i, (i - 1) % n) for i in range(n)]
+    left = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, fwd), params)
+    right = jax.tree.map(lambda x: jax.lax.ppermute(x, axis, bwd), params)
+    return jax.tree.map(lambda a, b: a + b, left, right), 2
+
+
+def consensus_grads(grads, params, state: ConsensusState, nbr_sum, n_nbr,
+                    cfg: ConsensusConfig):
+    """Add the ADMM augmented-Lagrangian gradient to the loss gradient."""
+    def add(g, p, b, s):
+        pf = p.astype(jnp.float32)
+        return (g.astype(jnp.float32) + 2.0 * b
+                + cfg.eta * (n_nbr * pf - s)).astype(g.dtype)
+    return jax.tree.map(add, grads, params, state.dual, nbr_sum)
+
+
+def dual_update(params, state: ConsensusState, nbr_sum, n_nbr,
+                cfg: ConsensusConfig) -> ConsensusState:
+    """eq. (9): beta += eta/2 * sum_u (r_v - r_u)."""
+    def upd(b, p, s):
+        return b + 0.5 * cfg.eta * (n_nbr * p.astype(jnp.float32) - s)
+    return ConsensusState(
+        dual=jax.tree.map(upd, state.dual, params, nbr_sum),
+        step=state.step + 1)
+
+
+def consensus_round(grads, params, state: ConsensusState,
+                    cfg: ConsensusConfig):
+    """One full exchange + dual update; returns (augmented grads, state).
+
+    Call inside shard_map over ``cfg.axis``.  When ``every > 1`` the caller
+    gates on ``state.step % every == 0`` (lax.cond) — see train/steps.py.
+    """
+    nbr_sum, n_nbr = ring_neighbor_sum(params, cfg.axis)
+    g = consensus_grads(grads, params, state, nbr_sum, n_nbr, cfg)
+    new_state = dual_update(params, state, nbr_sum, n_nbr, cfg)
+    return g, new_state
+
+
+def consensus_gap(params, axis: str):
+    """max_v ||r_v - mean_u r_u||_inf / scale — monitoring metric."""
+    mean = jax.tree.map(
+        lambda p: jax.lax.pmean(p.astype(jnp.float32), axis), params)
+    gaps = jax.tree.map(
+        lambda p, m: jnp.max(jnp.abs(p.astype(jnp.float32) - m)), params, mean)
+    return jax.tree.reduce(jnp.maximum, gaps)

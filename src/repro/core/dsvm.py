@@ -1,0 +1,38 @@
+"""DSVM — consensus distributed SVM (Forero, Cano & Giannakis 2010), the
+paper's single-task baseline [7].
+
+Their formulation is the T=1, no-task-coupling special case of DTSVM's
+Problem (4); we therefore reuse the Prop.-1 machinery with
+
+    couple = 0            (no cross-task consensus)
+    eps1 -> huge          (forces the shared term w0 to 0; only wt remains,
+                           recovering Forero's  1/2 sum_v ||w_v||^2)
+    box   = V * C         (Forero's  V*C * sum of slacks)
+
+which the unit tests verify coincides with DTSVM run with T=1.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core import dtsvm as core
+
+_EPS1_INF = 1e9
+
+
+def make_dsvm_problem(X, y, mask=None, adj=None, *, C=0.01, eps2=1.0,
+                      eta2=1.0, active=None) -> core.DTSVMProblem:
+    """X: (V, T, N, p) — each task is trained independently (per-task DSVM),
+    which is exactly how the paper's figures use the baseline."""
+    V, T = X.shape[0], X.shape[1]
+    return core.make_problem(
+        X, y, mask, adj, C=C, eps1=_EPS1_INF, eps2=eps2, eta1=0.0,
+        eta2=eta2, box_scale=float(V), active=active,
+        couple=jnp.zeros((V,), jnp.float32))
+
+
+def run_dsvm(prob: core.DTSVMProblem, iters: int, qp_iters: int = 200,
+             state: Optional[core.DTSVMState] = None, eval_fn=None):
+    return core.run_dtsvm(prob, iters, qp_iters, state=state, eval_fn=eval_fn)

@@ -1,0 +1,55 @@
+"""Multi-task parameter decomposition  w_t = w0 + wt  (paper eq. (2)),
+lifted to pytrees — used for task-specific heads/adapters on the assigned
+architectures.
+
+The regularizer  eps1/2 ||w0||^2 + eps2/2 sum_t ||wt||^2  interpolates
+between one shared head (eps2 -> inf) and independent heads (eps1 -> inf),
+exactly the paper's Section II trade-off; tests verify both limits.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class MultiTaskParams(NamedTuple):
+    shared: Any            # w0 pytree
+    task: Any              # wt pytree with leading task axis (T, ...)
+
+
+def init(params, num_tasks: int) -> MultiTaskParams:
+    """Start from a trained/initialized head: shared = params, tasks = 0."""
+    zeros = jax.tree.map(
+        lambda p: jnp.zeros((num_tasks,) + p.shape, p.dtype), params)
+    return MultiTaskParams(shared=params, task=zeros)
+
+
+def combine(mt: MultiTaskParams, t: int):
+    """Effective parameters for task t:  w0 + wt."""
+    return jax.tree.map(lambda s, d: s + d[t], mt.shared, mt.task)
+
+
+def combine_all(mt: MultiTaskParams):
+    """(T, ...) stacked effective parameters (for vmapped task batches)."""
+    return jax.tree.map(lambda s, d: s[None] + d, mt.shared, mt.task)
+
+
+def regularizer(mt: MultiTaskParams, eps1: float, eps2: float) -> jnp.ndarray:
+    sq = lambda tree: sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                          for x in jax.tree.leaves(tree))
+    return 0.5 * eps1 * sq(mt.shared) + 0.5 * eps2 * sq(mt.task)
+
+
+def split_grads(grads_combined, mt: MultiTaskParams, eps1: float,
+                eps2: float) -> MultiTaskParams:
+    """Map per-task gradients g_t (T, ...) of the combined parameters onto
+    the decomposition: dL/dw0 = sum_t g_t + eps1*w0; dL/dwt = g_t + eps2*wt.
+    """
+    g_shared = jax.tree.map(
+        lambda g, s: jnp.sum(g, axis=0) + eps1 * s.astype(g.dtype),
+        grads_combined, mt.shared)
+    g_task = jax.tree.map(
+        lambda g, d: g + eps2 * d.astype(g.dtype), grads_combined, mt.task)
+    return MultiTaskParams(shared=g_shared, task=g_task)

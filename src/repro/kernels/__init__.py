@@ -1,0 +1,1 @@
+from repro.kernels import gram, ops, qp_step, ref  # noqa: F401

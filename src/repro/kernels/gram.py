@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: weighted Gram matrix  K = Z diag(a) Z^T.
+
+This is the dual Hessian of DTSVM's QP (6) — the only O(N^2 p) hot spot of
+the paper's algorithm.  TPU adaptation (DESIGN.md §3): tile K into
+(BN x BN) MXU-aligned output blocks; each grid step loads two (BN, D) row
+panels of Z into VMEM, scales one by ``a`` (VPU) and contracts on the MXU.
+The feature dimension D (= p+1, tiny for the paper's PCA-10 data) is padded
+to the 128-lane width by the wrapper in ``ops.py``.
+
+Grid: (N/BN, N/BN).  VMEM per step: 2*BN*D + BN*BN floats — with BN=256 and
+D=128 that is ~0.5 MB, far under the ~16 MB v5e VMEM budget, so the block
+size is MXU-bound, not VMEM-bound.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK = 256
+
+
+def _gram_kernel(zi_ref, zj_ref, a_ref, out_ref):
+    zi = zi_ref[...]                       # (BN, D)
+    zj = zj_ref[...]                       # (BN, D)
+    a = a_ref[...]                         # (1, D)
+    zia = zi * a                           # VPU elementwise scale
+    out_ref[...] = jax.lax.dot_general(
+        zia, zj, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def weighted_gram_2d(Z: jnp.ndarray, a: jnp.ndarray, *,
+                     block: int = DEFAULT_BLOCK,
+                     interpret: bool = True) -> jnp.ndarray:
+    """K = Z diag(a) Z^T for a single problem.  Z: (N, D), a: (D,)."""
+    N, D = Z.shape
+    bn = min(block, max(_next_multiple(N, 8), 8))
+    Np = _next_multiple(N, bn)
+    Dp = _next_multiple(D, 128)
+    Zp = jnp.pad(Z, ((0, Np - N), (0, Dp - D))).astype(jnp.float32)
+    ap = jnp.pad(a, (0, Dp - D)).astype(jnp.float32)[None, :]   # (1, Dp)
+
+    grid = (Np // bn, Np // bn)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, Dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, Dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, Dp), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Np, Np), jnp.float32),
+        interpret=interpret,
+    )(Zp, Zp, ap)
+    return out[:N, :N]
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,63 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+On TPU the Pallas kernels run compiled; in this CPU container they run in
+``interpret=True`` mode (the kernel body executes in Python, validating the
+BlockSpec tiling and kernel semantics bit-for-bit against ``ref.py``).
+Because interpret mode is slow, the *default* CPU execution path is the
+jnp oracle; set ``REPRO_USE_PALLAS=1`` to force the interpreted kernels
+(the kernel test suite does this).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import gram as gram_kernel
+from repro.kernels import qp_step as qp_kernel
+from repro.kernels import ref
+
+
+def _use_pallas() -> bool:
+    flag = os.environ.get("REPRO_USE_PALLAS", "auto")
+    if flag == "1":
+        return True
+    if flag == "0":
+        return False
+    return jax.default_backend() == "tpu"
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """K = Z diag(a) Z^T over arbitrary leading batch dims."""
+    if not _use_pallas():
+        return ref.weighted_gram(Z, a)
+    fn = lambda z2, a1: gram_kernel.weighted_gram_2d(
+        z2, a1, interpret=_interpret())
+    batch = Z.shape[:-2]
+    if batch:
+        flatZ = Z.reshape((-1,) + Z.shape[-2:])
+        flata = a.reshape((-1,) + a.shape[-1:])
+        out = jax.lax.map(lambda za: fn(*za), (flatZ, flata))
+        return out.reshape(batch + out.shape[-2:])
+    return fn(Z, a)
+
+
+def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:
+    """Fused projected-gradient step over arbitrary leading batch dims."""
+    if not _use_pallas():
+        return ref.qp_pg_step(lam, K, q, hi, gamma)
+    fn = lambda l1, K2, q1, h1: qp_kernel.qp_pg_step_1d(
+        l1, K2, q1, h1, gamma, interpret=_interpret())
+    batch = lam.shape[:-1]
+    if batch:
+        flat = lambda x, nd: x.reshape((-1,) + x.shape[len(batch):])
+        out = jax.lax.map(
+            lambda args: fn(*args),
+            (flat(lam, 1), flat(K, 2), flat(q, 1), flat(hi, 1)))
+        return out.reshape(batch + out.shape[-1:])
+    return fn(lam, K, q, hi)

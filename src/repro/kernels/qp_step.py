@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: fused projected-gradient step of the box QP.
+
+    lam <- clip(lam + gamma * (q - K lam), 0, hi)
+
+One kernel performs the matvec K@lam (tiled over K's column blocks,
+accumulated in a VMEM scratch buffer) and, on the last column step, applies
+the gradient step + box projection in-register — lam never round-trips to
+HBM between the matvec and the projection.  This is the inner loop of
+DTSVM's dual solve (Prop. 1, eq. 6).
+
+Vectors are carried as (1, N) row panels so the lane dimension is the
+128-wide minor axis.  Grid: (N/BR, N/BC); the column index is the minor
+(fastest) grid dimension, so each output row block accumulates over all of
+its column blocks before finalizing.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK = 256
+
+
+def _qp_step_kernel(K_ref, lamc_ref, lamr_ref, q_ref, hi_ref, gamma_ref,
+                    out_ref, acc_ref, *, n_col: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    lam_c = lamc_ref[...]                   # (1, BC) column slice of lam
+    Kb = K_ref[...]                         # (BR, BC)
+    # (1, BC) x (BR, BC)^T -> (1, BR): y_r += sum_c K[r, c] lam[c]
+    acc_ref[...] += jax.lax.dot_general(
+        lam_c, Kb, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_col - 1)
+    def _finalize():
+        lam_r = lamr_ref[...]               # (1, BR) row slice
+        grad = q_ref[...] - acc_ref[...]
+        stepped = lam_r + gamma_ref[0, 0] * grad
+        out_ref[...] = jnp.clip(stepped, 0.0, hi_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def qp_pg_step_1d(lam, K, q, hi, gamma, *, block: int = DEFAULT_BLOCK,
+                  interpret: bool = True):
+    """One fused PG step for a single problem.  lam/q/hi: (N,), K: (N,N).
+
+    Padding rows get hi=0, so their duals are projected back to 0 and they
+    never contribute to the matvec (K padding is zero)."""
+    N = lam.shape[0]
+    bn = min(block, max(_next_multiple(N, 128), 128))
+    Np = _next_multiple(N, bn)
+    pad = Np - N
+    lam_p = jnp.pad(lam, (0, pad)).astype(jnp.float32)[None, :]
+    q_p = jnp.pad(q, (0, pad)).astype(jnp.float32)[None, :]
+    hi_p = jnp.pad(hi, (0, pad)).astype(jnp.float32)[None, :]
+    K_p = jnp.pad(K, ((0, pad), (0, pad))).astype(jnp.float32)
+    gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
+
+    n_row = n_col = Np // bn
+    out = pl.pallas_call(
+        functools.partial(_qp_step_kernel, n_col=n_col),
+        grid=(n_row, n_col),
+        in_specs=[
+            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),   # K tile
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),    # lam (column slice)
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # lam (row slice)
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # q
+            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # hi
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # gamma
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        interpret=interpret,
+    )(K_p, lam_p, lam_p, q_p, hi_p, gamma_arr)
+    return out[0, :N]
+
+
+def _next_multiple(x: int, m: int) -> int:
+    return -(-x // m) * m

@@ -1,0 +1,25 @@
+"""Pure-jnp oracles for the Pallas kernels (and the CPU execution path)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """K = Z diag(a) Z^T.  Z: (..., N, D), a: (..., D) -> (..., N, N).
+
+    This is the dual Hessian of DTSVM's QP (6):
+    K = (Y X~) [I,I] U^{-1} [I,I]^T (Y X~)^T with diagonal U.
+    """
+    return jnp.einsum("...nd,...d,...md->...nm", Z, a.astype(Z.dtype), Z)
+
+
+def qp_pg_step(lam: jnp.ndarray, K: jnp.ndarray, q: jnp.ndarray,
+               hi: jnp.ndarray, gamma: float) -> jnp.ndarray:
+    """One projected-gradient ascent step of the box QP:
+
+        lam <- clip(lam + gamma * (q - K lam), 0, hi)
+
+    lam/q/hi: (..., N), K: (..., N, N).
+    """
+    grad = q - jnp.einsum("...nm,...m->...n", K, lam)
+    return jnp.clip(lam + gamma * grad, 0.0, hi)

@@ -1,0 +1,4 @@
+# NOTE: dryrun is intentionally NOT imported here — importing it sets
+# XLA_FLAGS (512 host devices) before jax initializes, which must only
+# happen for explicit dry-run invocations.
+from repro.launch import costs, mesh  # noqa: F401

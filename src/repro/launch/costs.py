@@ -1,0 +1,137 @@
+"""Analytic per-step cost model for the roofline analysis.
+
+Why analytic: XLA's ``compiled.cost_analysis()`` counts a ``while`` body
+ONCE regardless of trip count (verified by probe — see EXPERIMENTS.md
+§Dry-run), and every model here scans over its layers, so the HLO numbers
+undercount by ~num_layers.  The dry run still records them as a
+diagnostic; the roofline terms are derived from this model, which is
+exact for matmul-dominated transformers:
+
+- FLOPs: 6*N_active*D for train (2 fwd + 4 bwd) plus the remat re-forward
+  (+2), 2*N_active*D for single forwards, plus attention score/value
+  matmul terms 4*B*S*S_eff*H*hd per attention layer (doubled/tripled for
+  bwd the same way).
+- HBM traffic: parameter+optimizer state streams per step kind (decode is
+  the classic weights-bound case: every parameter is read once per token),
+  plus KV-cache and saved-activation streams.
+- Collective bytes come from the (loop-multiplied) HLO parse in dryrun.py.
+
+All quantities are GLOBAL; divide by chips for per-device terms (weights
+and KV caches are fully sharded by the policy, so uniform division is the
+right first-order model; replicated small weights are noise at this
+scale).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass
+class StepCosts:
+    flops: float                 # global FLOPs per step
+    hbm_bytes: float             # global HBM traffic per step
+    param_bytes_state: float     # params + opt state resident bytes
+    cache_bytes: float           # KV/SSM cache resident bytes
+
+
+def _attn_flops_per_layer(cfg: ModelConfig, B: int, Sq: int, Sk: int,
+                          window: int) -> float:
+    """Score + value matmuls (2 GEMMs), 2*...*2 flops."""
+    s_eff = min(Sk, window) if window > 0 else Sk
+    if cfg.use_mla:
+        hd = cfg.qk_nope_head_dim + cfg.qk_rope_head_dim
+        vd = cfg.v_head_dim
+        return 2.0 * B * Sq * s_eff * cfg.num_heads * (hd + vd)
+    return 4.0 * B * Sq * s_eff * cfg.num_heads * cfg.head_dim
+
+
+def _attn_layers(cfg: ModelConfig, long_mode: bool):
+    """(count, window) pairs for attention layers incl. zamba shared."""
+    out = []
+    for k in cfg.layer_kinds():
+        if k == "local":
+            out.append(cfg.sliding_window)
+        elif k == "global":
+            out.append(cfg.long_context_window if long_mode else 0)
+        elif k == "mamba+shared_attn":
+            out.append(cfg.long_context_window if long_mode else 0)
+    if cfg.is_encoder_decoder:
+        out += [0] * cfg.num_encoder_layers          # bidirectional enc
+        out += [0] * cfg.num_layers                  # cross attention
+    return out
+
+
+def _cache_bytes(cfg: ModelConfig, B: int, S: int, long_mode: bool,
+                 dtype_bytes: int = 2) -> float:
+    total = 0.0
+    kinds = cfg.layer_kinds()
+    n_attn = sum(1 for k in kinds if not k.startswith("mamba"))
+    n_shared = sum(1 for k in kinds if k == "mamba+shared_attn")
+    n_mamba = sum(1 for k in kinds if k.startswith("mamba"))
+    if long_mode:
+        cache_len = min(S, max(cfg.sliding_window or S,
+                               cfg.long_context_window or S))
+    else:
+        cache_len = S
+    if cfg.use_mla:
+        per_pos = cfg.kv_lora_rank + cfg.qk_rope_head_dim
+        total += cfg.num_layers * B * cache_len * per_pos * dtype_bytes
+    else:
+        per_pos = 2 * cfg.num_kv_heads * cfg.head_dim
+        total += (n_attn + n_shared) * B * cache_len * per_pos * dtype_bytes
+    if n_mamba:
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+        total += n_mamba * B * (
+            cfg.ssm_nheads * cfg.ssm_head_dim * cfg.ssm_state * 4   # h fp32
+            + (cfg.ssm_conv - 1) * conv_ch * dtype_bytes)
+    if cfg.is_encoder_decoder:
+        total += cfg.num_layers * B * cfg.encoder_seq * \
+            2 * cfg.num_kv_heads * cfg.head_dim * dtype_bytes
+    return total
+
+
+def step_costs(cfg: ModelConfig, shape: InputShape,
+               long_mode: bool = False) -> StepCosts:
+    B, S = shape.global_batch, shape.seq_len
+    N = cfg.active_param_count()
+    p_bytes = cfg.param_count() * 4                      # fp32 master
+    opt_bytes = cfg.param_count() * 8                    # adam mu+nu fp32
+
+    if shape.step_kind == "train":
+        D = B * S
+        trunk = 6.0 * N * D                              # fwd(2) + bwd(4)
+        if cfg.remat:
+            trunk += 2.0 * N * D                         # re-forward
+        attn = sum(_attn_flops_per_layer(cfg, B, S, S, w)
+                   for w in _attn_layers(cfg, long_mode))
+        attn_total = attn * (4.0 if cfg.remat else 3.0)
+        flops = trunk + attn_total
+        # params fwd+remat+bwd reads (bf16 cast reads of fp32 master ~3x)
+        # + grad write + adam read/write
+        hbm = 3 * p_bytes + p_bytes + 2 * opt_bytes + p_bytes
+        # saved residuals r/w (bf16) and logits r/w (fp32)
+        hbm += 2 * (cfg.num_layers * B * S * cfg.d_model * 2)
+        hbm += 2 * (B * S * cfg.vocab_size * 4)
+        return StepCosts(flops, hbm, p_bytes + opt_bytes, 0.0)
+
+    if shape.step_kind == "prefill":
+        D = B * S
+        attn = sum(_attn_flops_per_layer(cfg, B, S, S, w)
+                   for w in _attn_layers(cfg, long_mode))
+        flops = 2.0 * N * D + attn
+        cache = _cache_bytes(cfg, B, S, long_mode)
+        hbm = p_bytes + cache + 2 * (cfg.num_layers * B * S *
+                                     cfg.d_model * 2)
+        return StepCosts(flops, hbm, p_bytes, cache)
+
+    # decode: one token against an S-long cache
+    D = B * 1
+    attn = sum(_attn_flops_per_layer(cfg, B, 1, S, w)
+               for w in _attn_layers(cfg, long_mode))
+    flops = 2.0 * N * D + attn
+    cache = _cache_bytes(cfg, B, S, long_mode)
+    # the decode roofline: read EVERY weight + the whole cache per step
+    hbm = p_bytes / 2 + cache            # weights usually bf16-served: /2
+    return StepCosts(flops, hbm, p_bytes / 2, cache)

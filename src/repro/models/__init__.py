@@ -1,0 +1,8 @@
+from repro.models import attention, layers, model, moe, ssm, transformer  # noqa: F401
+from repro.models.model import (  # noqa: F401
+    init_params,
+    input_specs,
+    make_inputs,
+    param_specs,
+    use_long_mode,
+)

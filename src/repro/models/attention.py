@@ -1,0 +1,402 @@
+"""Attention: GQA (sliding-window / softcap / bias) and DeepSeek-V2 MLA.
+
+Pure functions over parameter dicts.  Three entry points per mechanism:
+
+- ``*_apply``   : full-sequence self attention (train / prefill)
+- ``*_decode``  : single-token step against a KV cache
+- caches are explicit arrays threaded by the caller (stacked over layers
+  by the transformer's ``lax.scan``).
+
+Sliding windows are passed as *traced* int32 scalars (0 = global) so a
+single scanned layer body serves both local and global layers.  KV caches
+are ring buffers with an explicit per-slot position array, which makes the
+windowed/long-context decode path uniform.
+
+Long sequences (S > _CHUNK_THRESHOLD) use query-chunked attention
+(lax.map over query blocks) so the (B,H,Sq,Sk) score tensor never
+materialises in full — the TPU-idiomatic flash-style schedule, structured
+so XLA fuses the inner block.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, rms_norm_init, softcap
+
+Params = Dict[str, jnp.ndarray]
+
+_CHUNK_THRESHOLD = 2048
+_Q_CHUNK = 512
+
+NEG_INF = -2.0 ** 30
+
+
+# ===========================================================================
+# GQA
+# ===========================================================================
+def gqa_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    d, H, K, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, (d, H * hd)),
+        "wk": dense_init(ks[1], d, (d, K * hd)),
+        "wv": dense_init(ks[2], d, (d, K * hd)),
+        "wo": dense_init(ks[3], H * hd, (H * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((K * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((K * hd,), jnp.float32)
+    return p
+
+
+def _project_q(p: Params, x, H, hd):
+    q = x @ p["wq"].astype(x.dtype)
+    if "bq" in p:
+        q = q + p["bq"].astype(x.dtype)
+    return q.reshape(*x.shape[:-1], H, hd)
+
+
+def _project_kv(p: Params, x, K, hd):
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if "bk" in p:
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    k = k.reshape(*x.shape[:-1], K, hd)
+    v = v.reshape(*x.shape[:-1], K, hd)
+    return k, v
+
+
+def _sdpa(q, k, v, q_pos, k_pos, *, window, cap, scale, causal,
+          k_valid=None):
+    """Grouped scaled-dot-product attention over one query block.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, K, D); H = K * g.
+    q_pos: (Sq,), k_pos: (Sk,); window traced scalar int32 (<=0 -> global).
+    """
+    B, Sq, H, D = q.shape
+    K = k.shape[2]
+    g = H // K
+    qg = q.reshape(B, Sq, K, g, D)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores = scores * scale
+    scores = softcap(scores, cap)
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    mask &= jnp.where(
+        window > 0, q_pos[:, None] - k_pos[None, :] < window, True
+    )
+    if k_valid is not None:
+        mask &= k_valid[None, :]
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(B, Sq, H * v.shape[-1])  # v head dim may differ (MLA)
+
+
+def _flash_sdpa(q, k, v, q_pos, k_pos, *, window, cap, scale, causal,
+                k_valid=None, q_chunk=_Q_CHUNK, kv_chunk=2048):
+    """Online-softmax (flash-style) attention: lax.map over query blocks,
+    lax.scan over KV blocks with running (max, denom, acc) — the (Sq, Sk)
+    score matrix never materialises.  This is the memory schedule a Pallas
+    flash kernel implements on real TPU; expressing it structurally in JAX
+    gives the dry-run the same activation footprint."""
+    B, Sq, H, D = q.shape
+    Sk, K = k.shape[1], k.shape[2]
+    g = H // K
+    Dv = v.shape[-1]
+    Cq = min(q_chunk, Sq)
+    Ck = min(kv_chunk, Sk)
+    assert Sq % Cq == 0 and Sk % Ck == 0, (Sq, Cq, Sk, Ck)
+    nq, nk = Sq // Cq, Sk // Ck
+
+    qc = q.reshape(B, nq, Cq, K, g, D).transpose(1, 0, 2, 3, 4, 5)
+    pc = q_pos.reshape(nq, Cq)
+    kc = k.reshape(B, nk, Ck, K, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, Ck, K, Dv).transpose(1, 0, 2, 3, 4)
+    kpc = k_pos.reshape(nk, Ck)
+    kvalc = None if k_valid is None else k_valid.reshape(nk, Ck)
+
+    @jax.checkpoint
+    def one_q(args):
+        qi, pi = args                                 # (B,Cq,K,g,D), (Cq,)
+        m0 = jnp.full((B, K, g, Cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, K, g, Cq), jnp.float32)
+        a0 = jnp.zeros((B, K, g, Cq, Dv), jnp.float32)
+
+        @jax.checkpoint
+        def kv_body(carry, inp):
+            m, l, acc = carry
+            if kvalc is None:
+                kj, vj, pj = inp
+                valj = None
+            else:
+                kj, vj, pj, valj = inp
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qi, kj).astype(jnp.float32)
+            s = softcap(s * scale, cap)
+            mask = jnp.ones((Cq, Ck), bool)
+            if causal:
+                mask &= pj[None, :] <= pi[:, None]
+            mask &= jnp.where(window > 0,
+                              pi[:, None] - pj[None, :] < window, True)
+            if valj is not None:
+                mask &= valj[None, :]
+            s = jnp.where(mask[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            m_safe = jnp.where(jnp.isinf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isinf(s), 0.0, p)
+            alpha = jnp.where(jnp.isinf(m), 0.0, jnp.exp(m - m_safe))
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(qi.dtype), vj)
+            acc_new = acc * alpha[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        xs = (kc, vc, kpc) if kvalc is None else (kc, vc, kpc, kvalc)
+        (m, l, acc), _ = jax.lax.scan(kv_body, (m0, l0, a0), xs)
+        out = acc / jnp.maximum(l, 1e-30)[..., None]   # (B,K,g,Cq,Dv)
+        return out.transpose(0, 3, 1, 2, 4).reshape(B, Cq, H * Dv)
+
+    out = jax.lax.map(one_q, (qc, pc))                # (nq, B, Cq, H*Dv)
+    return out.transpose(1, 0, 2, 3).reshape(B, Sq, H * Dv).astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, q_pos, k_pos, **kw):
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    if Sq * Sk <= _CHUNK_THRESHOLD ** 2 and Sq <= _CHUNK_THRESHOLD:
+        return _sdpa(q, k, v, q_pos, k_pos, **kw)
+    if Sq % _Q_CHUNK != 0:
+        return _sdpa(q, k, v, q_pos, k_pos, **kw)
+    kv_chunk = Sk if Sk % 2048 else 2048
+    return _flash_sdpa(q, k, v, q_pos, k_pos, kv_chunk=kv_chunk, **kw)
+
+
+def gqa_apply(p: Params, x, *, positions, window, cfg: ModelConfig,
+              use_rope: bool = True, kv_x=None, causal: bool = True,
+              kv_positions=None):
+    """Self (or cross, via kv_x) attention over a full sequence."""
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _project_q(p, x, H, hd)
+    k, v = _project_kv(p, kv_x if kv_x is not None else x, K, hd)
+    k_pos = kv_positions if kv_positions is not None else positions
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    out = _chunked_sdpa(
+        q, k, v, positions, k_pos,
+        window=window, cap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(hd), causal=causal,
+    )
+    return out @ p["wo"].astype(x.dtype)
+
+
+def gqa_prefill(p: Params, x, *, positions, window, cfg: ModelConfig,
+                cache_len: int, use_rope: bool = True):
+    """Like gqa_apply but also returns the populated KV cache."""
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = _project_q(p, x, H, hd)
+    k, v = _project_kv(p, x, K, hd)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    out = _chunked_sdpa(
+        q, k, v, positions, positions,
+        window=window, cap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(hd), causal=True,
+    )
+    S = x.shape[1]
+    if cache_len >= S:
+        pad = cache_len - S
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions, (0, pad), constant_values=-1)
+    else:  # windowed cache keeps the last cache_len entries
+        ck, cv = k[:, -cache_len:], v[:, -cache_len:]
+        cpos = positions[-cache_len:]
+    cache = {"k": ck, "v": cv, "pos": cpos.astype(jnp.int32)}
+    return out @ p["wo"].astype(x.dtype), cache
+
+
+def gqa_decode(p: Params, x, cache: Params, cache_index, *, window,
+               cfg: ModelConfig, use_rope: bool = True):
+    """One-token decode.  x: (B, 1, d).  cache k/v: (B, Sc, K, D),
+    cache['pos']: (Sc,) slot positions (-1 = empty).  cache_index: scalar
+    int32 = current absolute position.  Ring-buffer write."""
+    H, K, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    Sc = cache["k"].shape[1]
+    pos = cache_index[None] if cache_index.ndim == 0 else cache_index
+    q = _project_q(p, x, H, hd)
+    k1, v1 = _project_kv(p, x, K, hd)
+    if use_rope:
+        q = apply_rope(q, pos, cfg.rope_theta)
+        k1 = apply_rope(k1, pos, cfg.rope_theta)
+    slot = jnp.mod(cache_index, Sc)
+    ck = jax.lax.dynamic_update_slice(cache["k"], k1.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v1.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos.astype(jnp.int32), (slot,))
+    out = _sdpa(
+        q, ck.astype(q.dtype), cv.astype(q.dtype), pos, cpos,
+        window=window, cap=cfg.attn_softcap,
+        scale=1.0 / math.sqrt(hd), causal=True, k_valid=cpos >= 0,
+    )
+    new_cache = {"k": ck, "v": cv, "pos": cpos}
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def gqa_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((batch, cache_len, K, hd), dtype),
+        "v": jax.ShapeDtypeStruct((batch, cache_len, K, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((cache_len,), jnp.int32),
+    }
+
+
+def gqa_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    K, hd = cfg.num_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, K, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, K, hd), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+# ===========================================================================
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ===========================================================================
+def mla_init(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    H = cfg.num_heads
+    r_q, r_kv = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wdq": dense_init(ks[0], d, (d, r_q)),
+        "q_ln": rms_norm_init(r_q),
+        "wuq": dense_init(ks[1], r_q, (r_q, H * (nope + rope))),
+        "wdkv": dense_init(ks[2], d, (d, r_kv)),
+        "kv_ln": rms_norm_init(r_kv),
+        "wuk": dense_init(ks[3], r_kv, (r_kv, H * nope)),
+        "wuv": dense_init(ks[4], r_kv, (r_kv, H * vh)),
+        "wkr": dense_init(ks[5], d, (d, rope)),
+        "wo": dense_init(ks[6], H * vh, (H * vh, d)),
+    }
+
+
+def _mla_q(p, x, cfg, positions):
+    H = cfg.num_heads
+    nope, rope = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim
+    cq = rms_norm(x @ p["wdq"].astype(x.dtype), p["q_ln"], cfg.norm_eps)
+    q = (cq @ p["wuq"].astype(x.dtype)).reshape(*x.shape[:-1], H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_latent(p, x, cfg, positions):
+    ckv = rms_norm(x @ p["wdkv"].astype(x.dtype), p["kv_ln"], cfg.norm_eps)
+    kr = (x @ p["wkr"].astype(x.dtype))[..., None, :]       # (B,S,1,rope)
+    kr = apply_rope(kr, positions, cfg.rope_theta)[..., 0, :]
+    return ckv, kr
+
+
+def mla_apply(p: Params, x, *, positions, cfg: ModelConfig, window=None):
+    """Train/prefill MLA with expanded K/V (standard formulation)."""
+    del window  # deepseek is always global
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    q_nope, q_rope = _mla_q(p, x, cfg, positions)
+    ckv, kr = _mla_latent(p, x, cfg, positions)
+    k_nope = (ckv @ p["wuk"].astype(x.dtype)).reshape(B, S, H, nope)
+    v = (ckv @ p["wuv"].astype(x.dtype)).reshape(B, S, H, vh)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(kr[:, :, None, :],
+                                                  (B, S, H, rope))], axis=-1)
+    out = _chunked_sdpa(
+        q, k, v, positions, positions,
+        window=jnp.int32(0), cap=0.0,
+        scale=1.0 / math.sqrt(nope + rope), causal=True,
+    )
+    return out @ p["wo"].astype(x.dtype), {"ckv": ckv, "kr": kr}
+
+
+def mla_decode(p: Params, x, cache: Params, cache_index, *,
+               cfg: ModelConfig, window=None):
+    """Absorbed-matrix MLA decode: attention runs in the 512-d latent space;
+    the per-token cache is (kv_lora_rank + rope) floats — MLA's entire point.
+    """
+    del window
+    B = x.shape[0]
+    H = cfg.num_heads
+    nope, rope, vh = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    r_kv = cfg.kv_lora_rank
+    Sc = cache["ckv"].shape[1]
+    pos = cache_index[None] if cache_index.ndim == 0 else cache_index
+
+    q_nope, q_rope = _mla_q(p, x, cfg, pos)                  # (B,1,H,·)
+    ckv1, kr1 = _mla_latent(p, x, cfg, pos)                  # (B,1,r), (B,1,rope)
+
+    slot = jnp.mod(cache_index, Sc)
+    ckv = jax.lax.dynamic_update_slice(
+        cache["ckv"], ckv1.astype(cache["ckv"].dtype), (0, slot, 0))
+    kr = jax.lax.dynamic_update_slice(
+        cache["kr"], kr1.astype(cache["kr"].dtype), (0, slot, 0))
+    cpos = jax.lax.dynamic_update_slice(cache["pos"],
+                                        pos.astype(jnp.int32), (slot,))
+
+    wuk = p["wuk"].reshape(r_kv, H, nope).astype(x.dtype)
+    # absorb W_uk into the query:  q_lat (B,H,r)
+    q_lat = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0], wuk)
+    scores = jnp.einsum("bhr,bsr->bhs", q_lat, ckv.astype(x.dtype))
+    scores = scores + jnp.einsum("bhe,bse->bhs", q_rope[:, 0], kr.astype(x.dtype))
+    scores = scores.astype(jnp.float32) / math.sqrt(nope + rope)
+    valid = (cpos >= 0) & (cpos <= cache_index)
+    scores = jnp.where(valid[None, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = jnp.einsum("bhs,bsr->bhr", w, ckv.astype(x.dtype))  # (B,H,r)
+    wuv = p["wuv"].reshape(r_kv, H, vh).astype(x.dtype)
+    out = jnp.einsum("bhr,rhv->bhv", ctx, wuv).reshape(B, 1, H * vh)
+    new_cache = {"ckv": ckv, "kr": kr, "pos": cpos}
+    return out @ p["wo"].astype(x.dtype), new_cache
+
+
+def mla_cache_spec(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": jax.ShapeDtypeStruct((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "kr": jax.ShapeDtypeStruct((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jax.ShapeDtypeStruct((cache_len,), jnp.int32),
+    }
+
+
+def mla_cache_init(cfg: ModelConfig, batch: int, cache_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "kr": jnp.zeros((batch, cache_len, cfg.qk_rope_head_dim), dtype),
+        "pos": jnp.full((cache_len,), -1, jnp.int32),
+    }
+
+
+def mla_prefill(p: Params, x, *, positions, cfg: ModelConfig, cache_len: int):
+    out, lat = mla_apply(p, x, positions=positions, cfg=cfg)
+    S = x.shape[1]
+    pad = cache_len - S
+    assert pad >= 0
+    cache = {
+        "ckv": jnp.pad(lat["ckv"], ((0, 0), (0, pad), (0, 0))),
+        "kr": jnp.pad(lat["kr"], ((0, 0), (0, pad), (0, 0))),
+        "pos": jnp.pad(positions, (0, pad), constant_values=-1).astype(jnp.int32),
+    }
+    return out, cache

@@ -1,0 +1,219 @@
+"""Common layers: norms, MLPs, rotary embeddings, initialisation.
+
+Everything is a pure function over explicit parameter pytrees — no module
+framework.  Parameters are plain nested dicts of ``jnp.ndarray`` so they can
+be stacked along a leading layer axis for ``lax.scan`` and sharded by the
+policy in ``repro.dist.sharding``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+Params = Dict[str, jnp.ndarray]
+
+
+# ---------------------------------------------------------------------------
+# ambient-mesh sharding hints (no-ops outside a mesh context)
+# ---------------------------------------------------------------------------
+def mesh_axis_sizes():
+    """AUTO axis sizes of the ambient mesh ({} outside any mesh context).
+
+    Manual axes (inside shard_map, e.g. the consensus trainer's ``data``
+    ring) are excluded: with_sharding_constraint may only reference Auto
+    axes."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return {}
+        auto = jax.sharding.AxisType.Auto
+        types = getattr(mesh, "axis_types", None)
+        if types is None:
+            return dict(zip(mesh.axis_names, mesh.axis_sizes))
+        return {n: s for n, s, t in zip(mesh.axis_names, mesh.axis_sizes,
+                                        types) if t == auto}
+    except Exception:
+        return {}
+
+
+def shard_hint(x: jnp.ndarray, dim_axes: Dict[int, object]) -> jnp.ndarray:
+    """with_sharding_constraint(x, P(...)) built from {dim: axis} where the
+    axis is a mesh axis name, a tuple of names, or the sentinel "batch"
+    (= ("pod","data") prefix that divides).  Dims that don't divide are
+    silently left unsharded; outside a mesh context this is the identity."""
+    sizes = mesh_axis_sizes()
+    if not sizes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    for dim, ax in dim_axes.items():
+        if dim >= x.ndim:
+            continue
+        if ax == "batch":
+            bax = tuple(a for a in ("pod", "data") if a in sizes)
+            if not bax:
+                continue
+            import numpy as _np
+            bsize = int(_np.prod([sizes[a] for a in bax]))
+            if x.shape[dim] % bsize == 0 and x.shape[dim] >= bsize:
+                spec[dim] = bax if len(bax) > 1 else bax[0]
+            continue
+        names = ax if isinstance(ax, tuple) else (ax,)
+        if not all(n in sizes for n in names):
+            continue
+        import numpy as _np
+        n = int(_np.prod([sizes[a] for a in names]))
+        if n > 1 and x.shape[dim] % n == 0 and x.shape[dim] >= n:
+            spec[dim] = ax
+    return jax.lax.with_sharding_constraint(
+        x, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def dense_init(key, fan_in: int, shape, dtype=jnp.float32) -> jnp.ndarray:
+    """Truncated-normal-ish scaled init (1/sqrt(fan_in))."""
+    scale = 1.0 / math.sqrt(max(fan_in, 1))
+    return scale * jax.random.normal(key, shape, dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jnp.ndarray:
+    return 0.02 * jax.random.normal(key, shape, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dtype)
+
+
+def rms_norm_init(d: int) -> jnp.ndarray:
+    # stored as an offset from 1 (gemma convention); init -> identity
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# activations / capping
+# ---------------------------------------------------------------------------
+def act_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """gemma2-style logit soft-capping; no-op when cap == 0."""
+    if cap <= 0.0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# gated / plain MLP
+# ---------------------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int, gated: bool) -> Params:
+    ks = jax.random.split(key, 3)
+    p = {
+        "up": dense_init(ks[0], d_model, (d_model, d_ff)),
+        "down": dense_init(ks[1], d_ff, (d_ff, d_model)),
+    }
+    if gated:
+        p["gate"] = dense_init(ks[2], d_model, (d_model, d_ff))
+    return p
+
+
+def mlp_apply(p: Params, x: jnp.ndarray, act: str, gated: bool) -> jnp.ndarray:
+    f = act_fn(act)
+    up = x @ p["up"].astype(x.dtype)
+    if gated:
+        up = f(x @ p["gate"].astype(x.dtype)) * up
+    else:
+        up = f(up)
+    return up @ p["down"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    half = x.shape[-1] // 2
+    freqs = rope_freqs(x.shape[-1], theta)                       # (half,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, half)
+    cos = jnp.cos(ang)[..., None, :]                              # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings / head
+# ---------------------------------------------------------------------------
+def embed_tokens(table: jnp.ndarray, tokens: jnp.ndarray, scale: bool,
+                 dtype) -> jnp.ndarray:
+    x = jnp.take(table, tokens, axis=0).astype(dtype)
+    if scale:  # gemma convention: sqrt(d_model) embedding scaling
+        x = x * jnp.asarray(math.sqrt(table.shape[-1]), dtype)
+    return x
+
+
+def lm_head(x: jnp.ndarray, table: jnp.ndarray, cap: float) -> jnp.ndarray:
+    logits = x @ table.astype(x.dtype)
+    return softcap(logits.astype(jnp.float32), cap)
+
+
+def cross_entropy(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean token cross-entropy; logits (B,S,V) fp32, targets (B,S) int."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def chunked_cross_entropy(x: jnp.ndarray, head: jnp.ndarray,
+                          targets: jnp.ndarray, cap: float,
+                          seq_chunk: int = 256) -> jnp.ndarray:
+    """CE without materializing the full (B,S,V) fp32 logits: scan over
+    sequence chunks, rematerializing each chunk's logits in the backward.
+    The §Perf memory lever for large-vocab training (results: EXPERIMENTS
+    §Perf pair 1)."""
+    B, S, d = x.shape
+    C = seq_chunk
+    while S % C != 0:
+        C //= 2
+        if C <= 1:
+            return cross_entropy(
+                lm_head(x, head, cap), targets)
+    n = S // C
+    xs = (x.reshape(B, n, C, d).transpose(1, 0, 2, 3),
+          targets.reshape(B, n, C).transpose(1, 0, 2))
+
+    @jax.checkpoint
+    def body(acc, inp):
+        xc, tc = inp
+        logits = lm_head(xc, head, cap)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(body, jnp.float32(0.0), xs)
+    return total / (B * S)

@@ -1,0 +1,115 @@
+"""Model facade + ``input_specs``.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the step function selected by the shape's ``step_kind`` — the
+multi-pod dry run lowers against these without allocating anything.
+
+Modality frontends are STUBS per the assignment: VLM configs receive
+pre-computed patch embeddings, audio configs receive pre-computed frame
+embeddings, both with the trunk's d_model.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import InputShape, ModelConfig
+from repro.models import transformer
+
+Params = Dict[str, Any]
+
+
+def use_long_mode(cfg: ModelConfig, shape: InputShape) -> bool:
+    """long_500k decodes run dense archs in their windowed long-context
+    variant (DESIGN.md §4)."""
+    return (shape.name == "long_500k" and cfg.long_context_ok
+            and cfg.long_context_window > 0)
+
+
+def max_positions(cfg: ModelConfig, shape: InputShape) -> int:
+    # whisper's learned decoder position table must cover the workload
+    return shape.seq_len if cfg.is_encoder_decoder else 0
+
+
+def init_params(cfg: ModelConfig, rng, shape: InputShape = None) -> Params:
+    max_seq = max_positions(cfg, shape) if shape is not None else 4096
+    return transformer.init_params(cfg, rng, max_seq=max_seq)
+
+
+def param_specs(cfg: ModelConfig, shape: InputShape = None) -> Params:
+    """Parameter ShapeDtypeStructs without allocation (for the dry run)."""
+    return jax.eval_shape(
+        lambda k: init_params(cfg, k, shape), jax.random.key(0))
+
+
+def _text_len(cfg: ModelConfig, seq_len: int) -> int:
+    if cfg.frontend == "vision":
+        return seq_len - cfg.num_prefix_tokens
+    return seq_len
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                compute_dtype=None) -> Dict[str, Any]:
+    """ShapeDtypeStructs for the selected step function's data arguments."""
+    B, S = shape.global_batch, shape.seq_len
+    dtype = jnp.dtype(compute_dtype or cfg.compute_dtype)
+    i32 = jnp.int32
+    kind = shape.step_kind
+    long_mode = use_long_mode(cfg, shape)
+
+    if kind == "train":
+        St = _text_len(cfg, S)
+        specs = {
+            "tokens": jax.ShapeDtypeStruct((B, St), i32),
+            "targets": jax.ShapeDtypeStruct((B, St), i32),
+        }
+        if cfg.frontend == "vision":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), dtype)
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dtype)
+        return specs
+
+    if kind == "prefill":
+        St = _text_len(cfg, S)
+        specs = {"tokens": jax.ShapeDtypeStruct((B, St), i32)}
+        if cfg.frontend == "vision":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, cfg.num_prefix_tokens, cfg.d_model), dtype)
+        if cfg.frontend == "audio":
+            specs["frames"] = jax.ShapeDtypeStruct(
+                (B, cfg.encoder_seq, cfg.d_model), dtype)
+        return specs
+
+    if kind == "decode":
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": transformer.cache_spec(cfg, B, S, dtype, long_mode),
+            "cache_index": jax.ShapeDtypeStruct((), i32),
+        }
+    raise ValueError(f"unknown step kind {kind!r}")
+
+
+def make_inputs(cfg: ModelConfig, shape: InputShape, rng,
+                compute_dtype=None) -> Dict[str, Any]:
+    """Concrete random inputs matching ``input_specs`` (for smoke tests)."""
+    specs = input_specs(cfg, shape, compute_dtype)
+    long_mode = use_long_mode(cfg, shape)
+    out: Dict[str, Any] = {}
+    k1, k2, k3 = jax.random.split(rng, 3)
+    for name, s in specs.items():
+        if name == "cache":
+            out["cache"] = transformer.cache_init(
+                cfg, shape.global_batch, shape.seq_len,
+                jnp.dtype(compute_dtype or cfg.compute_dtype), long_mode)
+        elif name == "cache_index":
+            out["cache_index"] = jnp.int32(0)
+        elif s.dtype == jnp.int32:
+            out[name] = jax.random.randint(k1, s.shape, 0, cfg.vocab_size,
+                                           jnp.int32)
+        else:
+            out[name] = jax.random.normal(k2, s.shape, s.dtype)
+    return out

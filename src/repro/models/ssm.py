@@ -1,0 +1,232 @@
+"""Mamba2 (SSD — state-space duality) block.  [arXiv:2405.21060]
+
+Train/prefill run the chunked SSD block decomposition (quadratic within a
+chunk on the MXU, linear recurrence across chunks via ``lax.scan``); decode
+is the O(1) recurrent step.  Pure functions over parameter dicts, matching
+the conventions of ``repro.models.attention``.
+
+Shapes: d_inner = expand*d_model, H = d_inner/head_dim SSM heads, each with
+head_dim = P state channels and d_state = N; B/C are shared per group
+(ngroups = G).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, rms_norm, shard_hint
+
+Params = Dict[str, jnp.ndarray]
+
+
+def mamba_init(key, cfg: ModelConfig) -> Params:
+    d, di = cfg.d_model, cfg.d_inner
+    G, N, H, w = cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_conv
+    conv_ch = di + 2 * G * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, (d, 2 * di + 2 * G * N + H)),
+        "conv_w": dense_init(ks[1], w, (w, conv_ch)),
+        "conv_b": jnp.zeros((conv_ch,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.exp(jax.random.uniform(ks[2], (H,),
+                                       minval=math.log(1e-3),
+                                       maxval=math.log(1e-1))))),
+        "norm": jnp.zeros((di,), jnp.float32),
+        "out_proj": dense_init(ks[3], di, (di, d)),
+    }
+
+
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    di, G, N, H = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state, cfg.ssm_nheads
+    z = proj[..., :di]
+    xBC = proj[..., di: 2 * di + 2 * G * N]
+    dt = proj[..., 2 * di + 2 * G * N:]
+    return z, xBC, dt
+
+
+def _split_xbc(cfg: ModelConfig, xBC: jnp.ndarray):
+    di, G, N = cfg.d_inner, cfg.ssm_ngroups, cfg.ssm_state
+    x = xBC[..., :di]
+    Bm = xBC[..., di: di + G * N].reshape(*xBC.shape[:-1], G, N)
+    Cm = xBC[..., di + G * N:].reshape(*xBC.shape[:-1], G, N)
+    return x, Bm, Cm
+
+
+def _causal_conv(xBC: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray):
+    """Depthwise causal conv over (B, S, C), width W, silu activation."""
+    W = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xBC.shape[1]] * w[i].astype(xBC.dtype)
+              for i in range(W))
+    return jax.nn.silu(out + b.astype(xBC.dtype))
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """Stable segment-sum: out[..., i, j] = sum_{j < k <= i} x[..., k]."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """SSD forward.  x:(B,S,H,P) dt:(B,S,H) A:(H,) Bm/Cm:(B,S,G,N).
+    Returns y:(B,S,H,P) and final state (B,H,P,N)."""
+    Bb, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    nc = S // chunk
+    assert S % chunk == 0
+
+    f32 = jnp.float32
+    dA = (dt.astype(f32) * A.astype(f32)).reshape(Bb, nc, chunk, H)
+    dtx = (x * dt[..., None].astype(x.dtype)).reshape(Bb, nc, chunk, H, P)
+    Bc = Bm.reshape(Bb, nc, chunk, G, N)
+    Cc = Cm.reshape(Bb, nc, chunk, G, N)
+
+    dA_cs = jnp.cumsum(dA, axis=2)                              # (B,nc,l,H)
+
+    # ---- intra-chunk (diagonal blocks) --------------------------------
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))           # (B,nc,H,l,l)
+    scores = jnp.einsum("bcign,bcjgn->bcgij", Cc, Bc)           # (B,nc,G,l,l)
+    scores = jnp.repeat(scores, rep, axis=2)                    # (B,nc,H,l,l)
+    y_diag = jnp.einsum("bchij,bchij,bcjhp->bcihp",
+                        scores.astype(f32), Lmat,
+                        dtx.astype(f32))
+
+    # ---- chunk states ----------------------------------------------------
+    decay_states = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)        # (B,nc,l,H)
+    states = jnp.einsum("bcjgn,bcjh,bcjhp->bchpn",
+                        Bc.astype(f32), decay_states,
+                        dtx.astype(f32))                        # (B,nc,H,P,N)
+
+    # ---- inter-chunk recurrence ----------------------------------------
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                   # (B,nc,H)
+    if h0 is None:
+        h0 = jnp.zeros((Bb, H, P, N), f32)
+
+    def step(h, inp):
+        dec, st = inp                                           # (B,H), (B,H,P,N)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                          # emit PREV state
+
+    hT, h_prev = jax.lax.scan(
+        step, h0.astype(f32),
+        (chunk_decay.transpose(1, 0, 2), states.transpose(1, 0, 2, 3, 4)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                     # (B,nc,H,P,N)
+
+    # ---- prev-state contribution ----------------------------------------
+    state_decay = jnp.exp(dA_cs)                                 # (B,nc,l,H)
+    Ch = jnp.repeat(Cc, rep, axis=3)                             # (B,nc,l,H,N)
+    y_off = jnp.einsum("bcihn,bchpn,bcih->bcihp",
+                       Ch.astype(f32), h_prev, state_decay)
+
+    y = (y_diag + y_off).reshape(Bb, S, H, P)
+    return y.astype(x.dtype), hT
+
+
+def mamba_apply(p: Params, u: jnp.ndarray, cfg: ModelConfig,
+                return_cache: bool = False):
+    """Full-sequence Mamba2 block.  u: (B, S, d_model)."""
+    Bb, S, _ = u.shape
+    di, H, P, N, G = (cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim,
+                      cfg.ssm_state, cfg.ssm_ngroups)
+    proj = u @ p["in_proj"].astype(u.dtype)
+    z, xBC, dt_raw = _split_proj(cfg, proj)
+    xBC = _causal_conv(xBC, p["conv_w"], p["conv_b"])
+    x, Bm, Cm = _split_xbc(cfg, xBC)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"])
+
+    chunk = min(cfg.ssm_chunk, S)
+    padded = -(-S // chunk) * chunk
+    if padded != S:
+        padn = padded - S
+        x = jnp.pad(x, ((0, 0), (0, padn), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, padn), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, padn), (0, 0)))
+
+    xh = x.reshape(Bb, padded, H, P)
+    # TPU placement: SSM heads over the model axis (recurrent-scan sharding)
+    # — every head-indexed SSD tensor (L, decay, states) shards with them.
+    xh = shard_hint(xh, {0: "batch", 2: "model"})
+    dt = shard_hint(dt, {0: "batch", 2: "model"})
+    y, hT = ssd_chunked(xh, dt, A, Bm, Cm, chunk)
+    y = y[:, :S]
+    y = y + x[:, :S].reshape(Bb, S, H, P) * p["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bb, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = y @ p["out_proj"].astype(u.dtype)
+    if not return_cache:
+        return out
+    # conv cache: last (w-1) raw xBC inputs (pre-conv)
+    w = cfg.ssm_conv
+    raw = _split_proj(cfg, proj)[1]
+    conv_state = jnp.pad(raw, ((0, 0), (max(w - 1 - S, 0), 0), (0, 0)))[:, -(w - 1):]
+    cache = {"h": hT.astype(jnp.float32), "conv": conv_state.astype(u.dtype)}
+    return out, cache
+
+
+def mamba_decode(p: Params, u: jnp.ndarray, cache: Params, cfg: ModelConfig):
+    """One-token recurrent step.  u: (B, 1, d).  cache: h (B,H,P,N) fp32,
+    conv (B, w-1, conv_ch)."""
+    Bb = u.shape[0]
+    di, H, P, N, G = (cfg.d_inner, cfg.ssm_nheads, cfg.ssm_head_dim,
+                      cfg.ssm_state, cfg.ssm_ngroups)
+    w = cfg.ssm_conv
+    proj = (u @ p["in_proj"].astype(u.dtype))[:, 0]               # (B, ·)
+    z, xBC_new, dt_raw = _split_proj(cfg, proj)
+
+    conv_in = jnp.concatenate([cache["conv"],
+                               xBC_new[:, None, :].astype(cache["conv"].dtype)],
+                              axis=1)                              # (B,w,C)
+    conv_out = jnp.einsum("bwc,wc->bc", conv_in.astype(u.dtype),
+                          p["conv_w"].astype(u.dtype)) + p["conv_b"].astype(u.dtype)
+    xBC = jax.nn.silu(conv_out)
+    x, Bm, Cm = _split_xbc(cfg, xBC)                               # (B,di),(B,G,N)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt * A)                                           # (B,H)
+
+    xh = x.reshape(Bb, H, P).astype(jnp.float32)
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)           # (B,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    h = cache["h"] * dA[..., None, None] + \
+        (dt[..., None, None] * xh[..., None]) * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", h, Ch)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bb, di).astype(u.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(u.dtype))[:, None, :]
+    new_cache = {"h": h, "conv": conv_in[:, 1:]}
+    return out, new_cache
+
+
+def mamba_cache_spec(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "h": jax.ShapeDtypeStruct(
+            (batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+            jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }
+
+
+def mamba_cache_init(cfg: ModelConfig, batch: int, dtype):
+    conv_ch = cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+    return {
+        "h": jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim, cfg.ssm_state),
+                       jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_ch), dtype),
+    }

@@ -1,0 +1,660 @@
+"""Architecture assembler: decoder-only / MoE / SSM / hybrid / enc-dec stacks.
+
+One scanned layer body per architecture family, with per-layer attributes
+(sliding windows, shared-block flags) passed as *scanned arrays* so that
+heterogeneous stacks (gemma local:global patterns) share a single set of
+stacked parameters.  Zamba2's weight-tied shared attention
+block rides the same scan: a per-layer boolean flag gates it behind
+lax.cond (one HLO copy) and every layer carries a uniform shared-attn KV
+slot — see DESIGN.md §5.
+
+Public API (all pure functions):
+    init_params(cfg, rng, max_seq)            -> params pytree
+    forward_train(params, batch, cfg, ...)    -> (logits, aux_loss)
+    prefill(params, batch, cfg, cache_len)    -> (logits, cache)
+    decode(params, batch, cache, idx, cfg)    -> (logits, new cache)
+    cache_spec / cache_init(cfg, batch, ...)  -> cache pytree (stacked)
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import (
+    ATTN_GLOBAL,
+    ATTN_LOCAL,
+    MAMBA,
+    MAMBA_SHARED_ATTN,
+    ModelConfig,
+)
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    cross_entropy,
+    dense_init,
+    embed_init,
+    embed_tokens,
+    lm_head,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    rms_norm_init,
+    softcap,
+)
+
+Params = Dict[str, Any]
+
+
+# ===========================================================================
+# activation sharding constraints
+# ===========================================================================
+from repro.models.layers import mesh_axis_sizes as _mesh_axis_sizes
+from repro.models.layers import shard_hint
+
+
+def constrain_activations(x: jnp.ndarray, kind: str = "residual") -> jnp.ndarray:
+    """Shard activations between blocks.  No-op outside a mesh context.
+
+    kind="residual": (B, S, d) -> batch over (pod,)data, seq over model —
+    sequence parallelism.  Bounds the remat-saved scan carries (the
+    per-layer residuals) without fighting the Megatron weight placement:
+    RMSNorm is feature-local so a seq-sharded carry is valid, and GSPMD
+    inserts the standard seq-parallel all-gather before attention.
+
+    kind="logits": (B, S, V) -> batch over (pod,)data, V over model
+    (matches the model-sharded head output; the softmax/CE reductions
+    become psums over model)."""
+    sizes = _mesh_axis_sizes()
+    if not sizes or x.ndim < 3:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = [None] * x.ndim
+    bax = [a for a in ("pod", "data") if a in sizes]
+    bsize = int(np.prod([sizes[a] for a in bax])) if bax else 1
+    if bax and x.shape[0] % bsize == 0 and x.shape[0] >= bsize:
+        spec[0] = tuple(bax) if len(bax) > 1 else bax[0]
+    m = sizes.get("model", 1)
+    if m > 1:
+        dim = 1 if kind == "residual" else x.ndim - 1
+        if x.shape[dim] % m == 0 and x.shape[dim] > m:
+            spec[dim] = "model"
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+# ===========================================================================
+# per-layer static attributes
+# ===========================================================================
+def layer_windows(cfg: ModelConfig, long_mode: bool) -> np.ndarray:
+    """Per-layer attention window (0 = global), honoring long-context mode."""
+    out = []
+    for kind in cfg.layer_kinds():
+        if kind == ATTN_LOCAL:
+            out.append(cfg.sliding_window)
+        elif kind == ATTN_GLOBAL:
+            out.append(cfg.long_context_window if long_mode else 0)
+        else:  # mamba layers: window unused
+            out.append(0)
+    return np.asarray(out, np.int32)
+
+
+def shared_attn_layers(cfg: ModelConfig) -> Tuple[int, ...]:
+    return tuple(i for i, k in enumerate(cfg.layer_kinds())
+                 if k == MAMBA_SHARED_ATTN)
+
+
+def required_cache_len(cfg: ModelConfig, seq_len: int, long_mode: bool) -> int:
+    """Uniform (stacked-over-layers) KV cache length."""
+    if not _has_attention(cfg):
+        return 0
+    w = layer_windows(cfg, long_mode)
+    attn_ws = [int(x) for k, x in zip(cfg.layer_kinds(), w)
+               if not k.startswith("mamba")]
+    if cfg.shared_attn_period:
+        attn_ws = [cfg.long_context_window if long_mode else 0]
+    if any(x == 0 for x in attn_ws):
+        return seq_len
+    return min(seq_len, max(attn_ws))
+
+
+def _has_attention(cfg: ModelConfig) -> bool:
+    kinds = cfg.layer_kinds()
+    return any(not k.startswith("mamba") for k in kinds) or \
+        MAMBA_SHARED_ATTN in kinds
+
+
+# ===========================================================================
+# parameter init
+# ===========================================================================
+def _attn_layer_init(key, cfg: ModelConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 4)
+    mech = attn.mla_init if cfg.use_mla else attn.gqa_init
+    p = {
+        "ln1": rms_norm_init(cfg.d_model),
+        "attn": mech(ks[0], cfg),
+        "ln2": rms_norm_init(cfg.d_model),
+    }
+    if cross:
+        p["ln_x"] = rms_norm_init(cfg.d_model)
+        p["cross"] = attn.gqa_init(ks[1], cfg, cross=True)
+    return p
+
+
+def _mlp_or_moe_init(key, cfg: ModelConfig, dense: bool) -> Params:
+    if cfg.is_moe and not dense:
+        return {"moe": moe_lib.moe_init(key, cfg)}
+    return {"mlp": mlp_init(key, cfg.d_model, cfg.d_ff, cfg.gated_mlp)}
+
+
+def _layer_init(key, cfg: ModelConfig, kind: str, dense_mlp: bool,
+                cross: bool) -> Params:
+    ks = jax.random.split(key, 2)
+    if kind.startswith("mamba"):
+        return {"ln1": rms_norm_init(cfg.d_model),
+                "mamba": ssm_lib.mamba_init(ks[0], cfg)}
+    p = _attn_layer_init(ks[0], cfg, cross=cross)
+    p.update(_mlp_or_moe_init(ks[1], cfg, dense=dense_mlp))
+    return p
+
+
+def init_params(cfg: ModelConfig, rng, max_seq: int = 0) -> Params:
+    """Build the full parameter pytree.  Scanned layers are stacked along a
+    leading axis via vmap-of-init over per-layer keys."""
+    kinds = cfg.layer_kinds()
+    n_dense = cfg.first_k_dense if cfg.is_moe else 0
+    keys = jax.random.split(rng, 8)
+
+    params: Params = {
+        "embed": embed_init(keys[0], (cfg.vocab_size, cfg.d_model)),
+        "final_norm": rms_norm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], cfg.d_model,
+                                    (cfg.d_model, cfg.vocab_size))
+
+    cross = cfg.is_encoder_decoder
+    # dense-MLP leading layers (deepseek) — unstacked list
+    if n_dense:
+        dk = jax.random.split(keys[2], n_dense)
+        params["dense_layers"] = [
+            _layer_init(dk[i], cfg, kinds[i], dense_mlp=True, cross=cross)
+            for i in range(n_dense)
+        ]
+
+    n_scan = cfg.num_layers - n_dense
+    scan_kind = kinds[n_dense]  # uniform param structure across scanned layers
+    lk = jax.random.split(keys[3], n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: _layer_init(k, cfg, scan_kind, dense_mlp=False, cross=cross)
+    )(lk)
+
+    if MAMBA_SHARED_ATTN in kinds:
+        sk = jax.random.split(keys[4], 2)
+        shared = _attn_layer_init(sk[0], cfg)
+        shared.update(_mlp_or_moe_init(sk[1], cfg, dense=True))
+        params["shared_attn"] = shared
+
+    if cfg.is_encoder_decoder:
+        ek = jax.random.split(keys[5], cfg.num_encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: _layer_init(k, cfg, ATTN_GLOBAL, dense_mlp=True,
+                                      cross=False))(ek),
+            "final_norm": rms_norm_init(cfg.d_model),
+        }
+        # whisper: learned absolute positions
+        dec_len = max(max_seq, 1)
+        params["pos_dec"] = embed_init(keys[6], (dec_len, cfg.d_model))
+        params["pos_enc"] = embed_init(keys[7], (cfg.encoder_seq, cfg.d_model))
+    return params
+
+
+# ===========================================================================
+# layer bodies
+# ===========================================================================
+def _attn_block(lp: Params, x, *, positions, window, cfg: ModelConfig,
+                enc_out=None, enc_positions=None):
+    """Full-seq attention layer: pre-norm attn (+cross) + MLP/MoE."""
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, _ = attn.mla_apply(lp["attn"], h, positions=positions, cfg=cfg)
+    else:
+        a = attn.gqa_apply(lp["attn"], h, positions=positions, window=window,
+                           cfg=cfg, use_rope=not cfg.is_encoder_decoder)
+    x = x + a
+    if enc_out is not None:
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        c = attn.gqa_apply(lp["cross"], h, positions=positions,
+                           window=jnp.int32(0), cfg=cfg, use_rope=False,
+                           kv_x=enc_out, causal=False,
+                           kv_positions=enc_positions)
+        x = x + c
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        m, aux = moe_lib.moe_apply(lp["moe"], h, cfg)
+    else:
+        m = mlp_apply(lp["mlp"], h, cfg.act, cfg.gated_mlp)
+    return x + m, aux
+
+
+def _mamba_block(lp: Params, x, cfg: ModelConfig, return_cache=False):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if return_cache:
+        out, cache = ssm_lib.mamba_apply(lp["mamba"], h, cfg, return_cache=True)
+        return x + out, cache
+    return x + ssm_lib.mamba_apply(lp["mamba"], h, cfg), jnp.float32(0.0)
+
+
+# ===========================================================================
+# trunk: full-sequence forward (train / prefill hidden states)
+# ===========================================================================
+def _encode(params: Params, frames, cfg: ModelConfig):
+    """Whisper encoder over stub frame embeddings (B, S_enc, d)."""
+    S = frames.shape[1]
+    x = frames + params["pos_enc"][:S].astype(frames.dtype)
+    positions = jnp.arange(S)
+
+    # encoder is bidirectional (causal=False)
+    def body_bidir(x, lp):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        a = attn.gqa_apply(lp["attn"], h, positions=positions,
+                           window=jnp.int32(0), cfg=cfg, use_rope=False,
+                           causal=False)
+        x = x + a
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(lp["mlp"], h, cfg.act, cfg.gated_mlp)
+        return x, None
+
+    x, _ = jax.lax.scan(body_bidir, x, params["encoder"]["layers"])
+    return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+
+def _embed_inputs(params: Params, batch: Dict[str, jnp.ndarray],
+                  cfg: ModelConfig, dtype):
+    """Token embedding + modality prefix handling.  Returns (x, n_prefix,
+    enc_out)."""
+    tokens = batch["tokens"]
+    scale = cfg.final_softcap > 0  # gemma-style embedding scaling
+    x = embed_tokens(params["embed"], tokens, scale, dtype)
+    enc_out = None
+    n_prefix = 0
+    if cfg.frontend == "vision":
+        vis = batch["vision_embeds"].astype(dtype)      # (B, P, d)
+        x = jnp.concatenate([vis, x], axis=1)
+        n_prefix = vis.shape[1]
+    elif cfg.frontend == "audio":
+        enc_out = _encode(params, batch["frames"].astype(dtype), cfg)
+    if cfg.is_encoder_decoder:
+        S = x.shape[1]
+        x = x + params["pos_dec"][:S].astype(dtype)
+    return x, n_prefix, enc_out
+
+
+def _trunk(params: Params, x, cfg: ModelConfig, long_mode: bool,
+           enc_out=None):
+    """Run all layers over hidden states x (full sequence)."""
+    S = x.shape[1]
+    positions = jnp.arange(S)
+    windows = jnp.asarray(layer_windows(cfg, long_mode))
+    n_dense = cfg.first_k_dense if cfg.is_moe else 0
+    enc_pos = None if enc_out is None else jnp.arange(enc_out.shape[1])
+    aux_total = jnp.float32(0.0)
+
+    for lp in params.get("dense_layers", []):
+        x, aux = _attn_block(lp, x, positions=positions, window=jnp.int32(0),
+                             cfg=cfg, enc_out=enc_out, enc_positions=enc_pos)
+        aux_total += aux
+
+    kinds = cfg.layer_kinds()
+    is_mamba = kinds[n_dense].startswith("mamba")
+    has_shared = MAMBA_SHARED_ATTN in kinds
+    shared = params.get("shared_attn")
+    shared_w = jnp.int32(cfg.long_context_window if long_mode else 0)
+    shared_flags = jnp.asarray(
+        [k == MAMBA_SHARED_ATTN for k in kinds[n_dense:]])
+
+    def body(carry, inp):
+        x, aux = carry
+        if has_shared:
+            lp, w, flag = inp
+        else:
+            lp, w = inp
+        if is_mamba:
+            x, a = _mamba_block(lp, x, cfg)
+        else:
+            x, a = _attn_block(lp, x, positions=positions, window=w, cfg=cfg,
+                               enc_out=enc_out, enc_positions=enc_pos)
+        if has_shared:
+            # zamba2: weight-tied shared attention block applied at flagged
+            # layers; lax.cond keeps a single copy of it in the scanned HLO
+            x, a2 = jax.lax.cond(
+                flag,
+                lambda h: _attn_block(shared, h, positions=positions,
+                                      window=shared_w, cfg=cfg),
+                lambda h: (h, jnp.float32(0.0)),
+                x)
+            a = a + a2
+        # constrain on exit: the body OUTPUT is the remat-saved carry, so
+        # this keeps the per-layer residuals sequence-parallel in storage
+        return (constrain_activations(x), aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], windows[n_dense:])
+    if has_shared:
+        xs = xs + (shared_flags,)
+    (x, aux_total2), _ = jax.lax.scan(body, (x, aux_total), xs)
+    return x, aux_total2
+
+
+def forward_train(params: Params, batch: Dict[str, jnp.ndarray],
+                  cfg: ModelConfig, long_mode: bool = False):
+    """Full forward + loss.  batch: tokens (B,S), targets (B,S), optional
+    vision_embeds / frames."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x, n_prefix, enc_out = _embed_inputs(params, batch, cfg, dtype)
+    x, aux = _trunk(params, x, cfg, long_mode, enc_out=enc_out)
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    head = params["head"] if "head" in params else params["embed"].T
+    if cfg.chunked_ce:
+        # §Perf lever: never materialize the full (B,S,V) fp32 logits
+        from repro.models.layers import chunked_cross_entropy
+        loss = chunked_cross_entropy(x, head, batch["targets"],
+                                     cfg.final_softcap) + aux
+        logits = lm_head(x[:, -1:], head, cfg.final_softcap)
+        return logits, loss
+    logits = lm_head(x, head, cfg.final_softcap)
+    logits = constrain_activations(logits, kind="logits")
+    loss = cross_entropy(logits, batch["targets"]) + aux
+    return logits, loss
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+def _layer_cache_spec(cfg: ModelConfig, kind: str, batch: int,
+                      cache_len: int, dtype, cross: bool, make):
+    """make = 'spec' | 'init'."""
+    if kind.startswith("mamba"):
+        f = ssm_lib.mamba_cache_spec if make == "spec" else ssm_lib.mamba_cache_init
+        return f(cfg, batch, dtype)
+    if cfg.use_mla:
+        f = attn.mla_cache_spec if make == "spec" else attn.mla_cache_init
+        return f(cfg, batch, cache_len, dtype)
+    f = attn.gqa_cache_spec if make == "spec" else attn.gqa_cache_init
+    c = f(cfg, batch, cache_len, dtype)
+    if cross:
+        # cross-attention K/V over encoder outputs, precomputed at prefill
+        K, hd, Se = cfg.num_kv_heads, cfg.head_dim, cfg.encoder_seq
+        if make == "spec":
+            c["xk"] = jax.ShapeDtypeStruct((batch, Se, K, hd), dtype)
+            c["xv"] = jax.ShapeDtypeStruct((batch, Se, K, hd), dtype)
+        else:
+            c["xk"] = jnp.zeros((batch, Se, K, hd), dtype)
+            c["xv"] = jnp.zeros((batch, Se, K, hd), dtype)
+    return c
+
+
+def _stack_specs(per_layer, n):
+    def stack(leaf):
+        if isinstance(leaf, jax.ShapeDtypeStruct):
+            return jax.ShapeDtypeStruct((n,) + leaf.shape, leaf.dtype)
+        return jnp.broadcast_to(leaf[None], (n,) + leaf.shape).copy()
+    return jax.tree.map(stack, per_layer)
+
+
+def cache_build(cfg: ModelConfig, batch: int, seq_len: int, dtype,
+                long_mode: bool, make: str) -> Params:
+    """Stacked cache pytree for decode.  ``seq_len`` = max positions."""
+    cache_len = required_cache_len(cfg, seq_len, long_mode)
+    kinds = cfg.layer_kinds()
+    n_dense = cfg.first_k_dense if cfg.is_moe else 0
+    cross = cfg.is_encoder_decoder
+    cache: Params = {}
+    if n_dense:
+        cache["dense"] = [
+            _layer_cache_spec(cfg, kinds[i], batch, cache_len, dtype, cross,
+                              make) for i in range(n_dense)]
+    if MAMBA_SHARED_ATTN in kinds:
+        # zamba2: every scanned layer carries BOTH the mamba state and a
+        # shared-attention KV slot (only flagged layers use the latter; the
+        # uniform layout keeps the decode scan homogeneous — DESIGN.md §5)
+        per_layer = dict(_layer_cache_spec(cfg, MAMBA, batch, cache_len,
+                                           dtype, False, make))
+        per_layer.update(_layer_cache_spec(cfg, ATTN_GLOBAL, batch,
+                                           cache_len, dtype, False, make))
+        cache["layers"] = _stack_specs(per_layer, cfg.num_layers)
+    else:
+        kind = kinds[n_dense]
+        cache["layers"] = _stack_specs(
+            _layer_cache_spec(cfg, kind, batch, cache_len, dtype, cross, make),
+            cfg.num_layers - n_dense)
+    return cache
+
+
+cache_spec = functools.partial(cache_build, make="spec")
+cache_init = functools.partial(cache_build, make="init")
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+def _attn_block_prefill(lp, x, *, positions, window, cfg, cache_len,
+                        enc_out=None, enc_positions=None):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache = attn.mla_prefill(lp["attn"], h, positions=positions,
+                                    cfg=cfg, cache_len=cache_len)
+    else:
+        a, cache = attn.gqa_prefill(lp["attn"], h, positions=positions,
+                                    window=window, cfg=cfg,
+                                    cache_len=cache_len,
+                                    use_rope=not cfg.is_encoder_decoder)
+    x = x + a
+    if enc_out is not None:
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        c = attn.gqa_apply(lp["cross"], h, positions=positions,
+                           window=jnp.int32(0), cfg=cfg, use_rope=False,
+                           kv_x=enc_out, causal=False,
+                           kv_positions=enc_positions)
+        x = x + c
+        k, v = attn._project_kv(lp["cross"], enc_out, cfg.num_kv_heads,
+                                cfg.head_dim)
+        cache["xk"], cache["xv"] = k, v
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        m, _ = moe_lib.moe_apply(lp["moe"], h, cfg)
+    else:
+        m = mlp_apply(lp["mlp"], h, cfg.act, cfg.gated_mlp)
+    return x + m, cache
+
+
+def prefill(params: Params, batch: Dict[str, jnp.ndarray], cfg: ModelConfig,
+            long_mode: bool = False, min_cache_len: int = 0):
+    """Process a prompt, return last-position logits + populated cache.
+
+    ``min_cache_len`` reserves ring-cache capacity beyond the prompt so the
+    caller can decode continuation tokens without re-seating the cache."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x, n_prefix, enc_out = _embed_inputs(params, batch, cfg, dtype)
+    S = x.shape[1]
+    cache_len = max(required_cache_len(cfg, S, long_mode), min_cache_len)
+    positions = jnp.arange(S)
+    windows = jnp.asarray(layer_windows(cfg, long_mode))
+    n_dense = cfg.first_k_dense if cfg.is_moe else 0
+    enc_pos = None if enc_out is None else jnp.arange(enc_out.shape[1])
+    kinds = cfg.layer_kinds()
+    cache: Params = {}
+
+    if n_dense:
+        cache["dense"] = []
+        for i, lp in enumerate(params["dense_layers"]):
+            x, c = _attn_block_prefill(lp, x, positions=positions,
+                                       window=jnp.int32(0), cfg=cfg,
+                                       cache_len=cache_len, enc_out=enc_out,
+                                       enc_positions=enc_pos)
+            cache["dense"].append(c)
+
+    is_mamba = kinds[n_dense].startswith("mamba")
+    has_shared = MAMBA_SHARED_ATTN in kinds
+    shared = params.get("shared_attn")
+    shared_w = jnp.int32(cfg.long_context_window if long_mode else 0)
+    shared_flags = jnp.asarray(
+        [k == MAMBA_SHARED_ATTN for k in kinds[n_dense:]])
+
+    def body(x, inp):
+        if has_shared:
+            lp, w, flag = inp
+        else:
+            lp, w = inp
+        if is_mamba:
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            out, c = ssm_lib.mamba_apply(lp["mamba"], h, cfg,
+                                         return_cache=True)
+            x = x + out
+        else:
+            x, c = _attn_block_prefill(lp, x, positions=positions, window=w,
+                                       cfg=cfg, cache_len=cache_len,
+                                       enc_out=enc_out, enc_positions=enc_pos)
+        if has_shared:
+            dtype = x.dtype
+            x, sc = jax.lax.cond(
+                flag,
+                lambda h: _attn_block_prefill(
+                    shared, h, positions=positions, window=shared_w,
+                    cfg=cfg, cache_len=cache_len),
+                lambda h: (h, attn.gqa_cache_init(cfg, h.shape[0],
+                                                  cache_len, dtype)),
+                x)
+            c = {**c, **sc}
+        return constrain_activations(x), c
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    xs = (params["layers"], windows[n_dense:])
+    if has_shared:
+        xs = xs + (shared_flags,)
+    x, layer_caches = jax.lax.scan(body, x, xs)
+    cache["layers"] = layer_caches
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1:, :]
+    if "head" in params:
+        logits = lm_head(last, params["head"], cfg.final_softcap)
+    else:
+        logits = lm_head(last, params["embed"].T, cfg.final_softcap)
+    return logits, cache
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+def _attn_block_decode(lp, x, cache, cache_index, *, window, cfg):
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        a, cache_sa = attn.mla_decode(
+            lp["attn"], h, {k: cache[k] for k in ("ckv", "kr", "pos")},
+            cache_index, cfg=cfg)
+    else:
+        a, cache_sa = attn.gqa_decode(
+            lp["attn"], h, {k: cache[k] for k in ("k", "v", "pos")},
+            cache_index, window=window, cfg=cfg,
+            use_rope=not cfg.is_encoder_decoder)
+    x = x + a
+    new_cache = dict(cache)
+    new_cache.update(cache_sa)
+    if "xk" in cache:  # whisper cross attention against precomputed enc K/V
+        h = rms_norm(x, lp["ln_x"], cfg.norm_eps)
+        B = x.shape[0]
+        q = attn._project_q(lp["cross"], h, cfg.num_heads, cfg.head_dim)
+        Se = cache["xk"].shape[1]
+        c = attn._sdpa(q, cache["xk"].astype(x.dtype),
+                       cache["xv"].astype(x.dtype),
+                       jnp.zeros((1,), jnp.int32), jnp.arange(Se),
+                       window=jnp.int32(0), cap=0.0,
+                       scale=1.0 / math.sqrt(cfg.head_dim), causal=False)
+        x = x + c @ lp["cross"]["wo"].astype(x.dtype)
+    h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if "moe" in lp:
+        m, aux = moe_lib.moe_apply(lp["moe"], h, cfg)
+    else:
+        m = mlp_apply(lp["mlp"], h, cfg.act, cfg.gated_mlp)
+    return x + m, new_cache
+
+
+def decode(params: Params, batch: Dict[str, jnp.ndarray], cache: Params,
+           cache_index, cfg: ModelConfig, long_mode: bool = False):
+    """One decode step.  batch['tokens']: (B, 1)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    tokens = batch["tokens"]
+    scale = cfg.final_softcap > 0
+    x = embed_tokens(params["embed"], tokens, scale, dtype)
+    if cfg.is_encoder_decoder:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_dec"], jnp.minimum(cache_index,
+                                           params["pos_dec"].shape[0] - 1),
+            1, axis=0).astype(dtype)
+    windows = jnp.asarray(layer_windows(cfg, long_mode))
+    n_dense = cfg.first_k_dense if cfg.is_moe else 0
+    kinds = cfg.layer_kinds()
+    new_cache: Params = {}
+
+    if n_dense:
+        new_cache["dense"] = []
+        for i, lp in enumerate(params["dense_layers"]):
+            x, c = _attn_block_decode(lp, x, cache["dense"][i], cache_index,
+                                      window=jnp.int32(0), cfg=cfg)
+            new_cache["dense"].append(c)
+
+    is_mamba = kinds[n_dense].startswith("mamba")
+    has_shared = MAMBA_SHARED_ATTN in kinds
+    shared = params.get("shared_attn")
+    shared_w = jnp.int32(cfg.long_context_window if long_mode else 0)
+    shared_flags = jnp.asarray(
+        [k == MAMBA_SHARED_ATTN for k in kinds[n_dense:]])
+
+    def body(x, inp):
+        if has_shared:
+            lp, w, c, flag = inp
+        else:
+            lp, w, c = inp
+        if is_mamba:
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            out, c2 = ssm_lib.mamba_decode(
+                lp["mamba"], h, {k: c[k] for k in ("h", "conv")}, cfg)
+            x = x + out
+        else:
+            x, c2 = _attn_block_decode(lp, x, c, cache_index, window=w,
+                                       cfg=cfg)
+        if has_shared:
+            ac = {k: c[k] for k in ("k", "v", "pos")}
+            x, ac2 = jax.lax.cond(
+                flag,
+                lambda h: _attn_block_decode(shared, h, ac, cache_index,
+                                             window=shared_w, cfg=cfg),
+                lambda h: (h, ac),
+                x)
+            c2 = {**c2, **ac2}
+        return x, c2
+
+    xs = (params["layers"], windows[n_dense:], cache["layers"])
+    if has_shared:
+        xs = xs + (shared_flags,)
+    x, layer_caches = jax.lax.scan(body, x, xs)
+    new_cache["layers"] = layer_caches
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if "head" in params:
+        logits = lm_head(x, params["head"], cfg.final_softcap)
+    else:
+        logits = lm_head(x, params["embed"].T, cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    cosine_schedule,
+    global_norm,
+    sgd,
+)

@@ -1,0 +1,11 @@
+import os
+import sys
+
+# tests import repro from src/ and helpers from tests/
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, _HERE)
+sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "src"))
+
+# NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
+# (the 512-device override belongs to repro.launch.dryrun ONLY).
+# Distributed tests spawn subprocesses via helpers.run_with_devices.

@@ -1,0 +1,98 @@
+"""Analytic cost model + HLO collective parser tests."""
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.launch import costs
+
+
+def test_train_flops_close_to_6nd():
+    cfg = get_config("qwen2-0.5b")
+    shape = SHAPES["train_4k"]
+    c = costs.step_costs(cfg, shape)
+    six_nd = 6.0 * cfg.active_param_count() * shape.global_batch * shape.seq_len
+    # remat adds ~+2ND, attention a bit more: ratio in [1.0, 2.5]
+    assert 1.0 <= c.flops / six_nd <= 2.5
+
+
+def test_moe_uses_active_params():
+    cfg = get_config("deepseek-v2-236b")
+    shape = SHAPES["train_4k"]
+    c = costs.step_costs(cfg, shape)
+    six_nd_total = 6.0 * cfg.param_count() * shape.global_batch * shape.seq_len
+    assert c.flops < 0.5 * six_nd_total      # top-6 of 160 experts
+
+
+def test_decode_memory_bound_by_weights_and_cache():
+    cfg = get_config("qwen2.5-32b")
+    shape = SHAPES["decode_32k"]
+    c = costs.step_costs(cfg, shape)
+    assert c.hbm_bytes >= cfg.param_count() * 2 * 0.9   # bf16 weights read
+    assert c.cache_bytes > 0
+    # decode flops tiny vs train
+    c_train = costs.step_costs(cfg, SHAPES["train_4k"])
+    assert c.flops < 1e-3 * c_train.flops
+
+
+def test_sliding_window_reduces_attention_flops():
+    cfg = get_config("gemma2-2b")
+    pre = SHAPES["prefill_32k"]
+    full = costs.step_costs(cfg.replace(sliding_window=0), pre)
+    swa = costs.step_costs(cfg, pre)
+    assert swa.flops < full.flops
+
+
+def test_mamba_decode_cache_constant_in_seq():
+    cfg = get_config("mamba2-130m")
+    c32 = costs.step_costs(cfg, SHAPES["decode_32k"])
+    c500 = costs.step_costs(cfg, SHAPES["long_500k"], long_mode=True)
+    # SSM state is O(1) in sequence length (per sequence)
+    per_seq_32 = c32.cache_bytes / SHAPES["decode_32k"].global_batch
+    per_seq_500 = c500.cache_bytes / SHAPES["long_500k"].global_batch
+    assert abs(per_seq_32 - per_seq_500) / per_seq_32 < 1e-6
+
+
+def test_mla_cache_much_smaller_than_gqa():
+    ds = get_config("deepseek-v2-236b")
+    c = costs.step_costs(ds, SHAPES["decode_32k"])
+    # MLA latent cache: (512+64) per position vs 128 heads * 128 * 2
+    naive = ds.num_layers * 128 * 32768 * 2 * 128 * 128 * 2
+    assert c.cache_bytes < 0.05 * naive
+
+
+def test_collective_parser_loop_multiplier():
+    from repro.launch import dryrun as dr
+    hlo = """
+HloModule test
+
+%while_body.1 (p: (f32[8])) -> (f32[8]) {
+  %x = f32[8]{0} parameter(0)
+  %ag = f32[32]{0} all-gather(f32[8]{0} %x), replica_groups={}
+  ROOT %t = (f32[8]{0}) tuple(%x)
+}
+
+%cond.2 (p: (f32[8])) -> pred[] {
+  ROOT %c = pred[] constant(true)
+}
+
+ENTRY %main (a: f32[8]) -> f32[8] {
+  %a = f32[8]{0} parameter(0)
+  %ar = f32[8]{0} all-reduce(f32[8]{0} %a), to_apply=%add
+  %w = (f32[8]{0}) while((f32[8]{0}) %t0), condition=%cond.2, body=%while_body.1
+  ROOT %r = f32[8]{0} get-tuple-element(%w), index=0
+}
+"""
+    out = dr.collective_bytes(hlo, loop_multiplier=10)
+    # all-reduce outside the loop: counted once (8 floats = 32 B)
+    assert out["bytes_per_op"]["all-reduce"] == 32
+    # all-gather inside the while body: x10
+    assert out["counts"]["all-gather"] == 10
+    assert out["bytes_per_op"]["all-gather"] == 10 * 32
+
+
+def test_parser_dtype_sizes():
+    from repro.launch import dryrun as dr
+    assert dr._shape_bytes("bf16", "4,4") == 32
+    assert dr._shape_bytes("f32", "10") == 40
+    assert dr._shape_bytes("pred", "8") == 8
+    assert dr._shape_bytes("s32", "") == 4

@@ -1,0 +1,180 @@
+"""DTSVM (Prop. 1) — structural and paper-claim tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import csvm, dsvm, dtsvm, graph
+from repro.data import synthetic
+
+
+def _make(V=6, T=2, n_tgt=30, n_src=300, seed=1, relatedness=0.9, noise=1.0,
+          degree=0.8):
+    n_train = np.zeros((V, T), int)
+    n_train[:, 0] = synthetic.split_counts(n_tgt, V)
+    if T > 1:
+        n_train[:, 1] = synthetic.split_counts(n_src, V)
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n_train, n_test=600,
+        relatedness=relatedness, noise=noise, seed=seed)
+    A = graph.make_graph("random", V, degree=degree, seed=0)
+    return data, A
+
+
+def _risk_eval(data, V, T):
+    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
+                           (V, T) + data["X_test"].shape[1:])
+    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
+                           (V, T) + data["y_test"].shape[1:])
+    return lambda st: dtsvm.risks(st.r, Xte, yte)
+
+
+def test_u_diag_positive():
+    data, A = _make()
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A)
+    ntp, nbr = dtsvm._counts(prob)
+    u = dtsvm._u_diag(prob, ntp, nbr)
+    assert float(jnp.min(u)) > 0.0
+
+
+def test_consensus_residuals_shrink():
+    data, A = _make()
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A, C=0.01)
+    st = dtsvm.init_state(prob)
+    st5, _ = dtsvm.run_dtsvm(prob, 5, qp_iters=60, state=st)
+    st40, _ = dtsvm.run_dtsvm(prob, 35, qp_iters=60, state=st5)
+    t5, n5 = dtsvm.consensus_residuals(st5, prob)
+    t40, n40 = dtsvm.consensus_residuals(st40, prob)
+    assert float(t40) < float(t5)
+    assert float(n40) < float(n5)
+    assert float(n40) < 5e-2
+
+
+def test_transfer_beats_dsvm_on_scarce_target():
+    """The paper's central claim (Fig. 2): with scarce target data, DTSVM's
+    target-task risk beats per-task DSVM while the source task is not hurt.
+    Like the paper (15 random draws), we average over random seeds."""
+    V, T = 8, 2
+    rt, rd = [], []
+    for seed in (1, 2, 3, 4):
+        data, A = _make(V=V, T=T, n_tgt=40, n_src=600, seed=seed,
+                        relatedness=0.92)
+        ev = _risk_eval(data, V, T)
+        prob_t = dtsvm.make_problem(data["X"], data["y"], data["mask"], A,
+                                    C=0.01)
+        st_t, _ = dtsvm.run_dtsvm(prob_t, 60, qp_iters=80)
+        prob_d = dsvm.make_dsvm_problem(data["X"], data["y"], data["mask"],
+                                        A, C=0.01)
+        st_d, _ = dtsvm.run_dtsvm(prob_d, 60, qp_iters=80)
+        rt.append(np.asarray(ev(st_t)).mean(0))
+        rd.append(np.asarray(ev(st_d)).mean(0))
+    r_t, r_d = np.mean(rt, 0), np.mean(rd, 0)
+    assert r_t[0] < r_d[0] - 0.005, (r_t, r_d)     # target improves on avg
+    assert r_t[1] < r_d[1] + 0.05                  # source not hurt
+
+
+def test_dtsvm_with_one_task_equals_dsvm():
+    """T=1: task consensus is vacuous, so DTSVM(T=1, eps1=inf, couple=0)
+    and DSVM must coincide exactly (they are the same problem)."""
+    V = 5
+    data, A = _make(V=V, T=1, n_tgt=40, n_src=0)
+    X = data["X"][:, :1]
+    y = data["y"][:, :1]
+    m = data["mask"][:, :1]
+    prob_a = dsvm.make_dsvm_problem(X, y, m, A, C=0.02)
+    prob_b = dtsvm.make_problem(
+        X, y, m, A, C=0.02, eps1=dsvm._EPS1_INF, eta1=0.0,
+        box_scale=float(V), couple=np.zeros(V, np.float32))
+    st_a, _ = dtsvm.run_dtsvm(prob_a, 15, qp_iters=60)
+    st_b, _ = dtsvm.run_dtsvm(prob_b, 15, qp_iters=60)
+    np.testing.assert_allclose(np.asarray(st_a.r), np.asarray(st_b.r),
+                               atol=1e-6)
+
+
+def test_w0_vanishes_when_eps1_huge():
+    """eps1 >> eps2 forces the shared term to 0 (paper Section II)."""
+    data, A = _make()
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A,
+                              eps1=1e9, eps2=1.0)
+    st, _ = dtsvm.run_dtsvm(prob, 20, qp_iters=60)
+    p = 10
+    w0 = np.asarray(st.r[..., :p])
+    wt = np.asarray(st.r[..., p + 1: 2 * p + 1])
+    assert np.abs(w0).max() < 1e-4
+    assert np.abs(wt).max() > 1e-3
+
+
+def test_tasks_agree_when_eps2_huge():
+    """eps2 >> eps1 forces the task-specific w to 0 -> all tasks share the
+    weight vector (the bias b_t is NOT eps2-regularized in the paper's
+    formulation, so only w is compared)."""
+    data, A = _make()
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A,
+                              eps1=1.0, eps2=1e9)
+    st, _ = dtsvm.run_dtsvm(prob, 30, qp_iters=60)
+    p = 10
+    wt = np.asarray(st.r[..., p + 1: 2 * p + 1])
+    assert np.abs(wt).max() < 1e-4
+    # effective w = w0 (+0) must then agree across tasks at each node
+    w0 = np.asarray(st.r[..., :p])
+    assert np.abs(w0[:, 0] - w0[:, 1]).max() < 2e-2
+
+
+def test_inactive_tasks_frozen():
+    data, A = _make(V=4, T=2)
+    active = np.ones((4, 2), np.float32)
+    active[2:, 1] = 0.0       # nodes 2,3 do not train task 1
+    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A,
+                              active=active)
+    st, _ = dtsvm.run_dtsvm(prob, 5, qp_iters=40)
+    r = np.asarray(st.r)
+    assert np.abs(r[2:, 1]).max() == 0.0
+    assert np.abs(r[:2, 1]).max() > 0.0
+
+
+def test_decision_values_formula():
+    rng = np.random.default_rng(0)
+    p = 4
+    r = rng.normal(size=(2, 3, 2 * p + 2)).astype(np.float32)
+    X = rng.normal(size=(2, 3, 5, p)).astype(np.float32)
+    g = np.asarray(dtsvm.decision_values(jnp.asarray(r), jnp.asarray(X)))
+    for v in range(2):
+        for t in range(3):
+            w = r[v, t, :p] + r[v, t, p + 1: 2 * p + 1]
+            b = r[v, t, p] + r[v, t, 2 * p + 1]
+            np.testing.assert_allclose(g[v, t], X[v, t] @ w + b, rtol=1e-5,
+                                       atol=1e-5)
+
+
+def test_csvm_separable():
+    rng = np.random.default_rng(0)
+    d = rng.normal(size=10)
+    d /= np.linalg.norm(d)
+    X, y = synthetic.sample_task(rng, d, 100, 100, noise=0.1, margin=2.0)
+    w, b = csvm.csvm_fit(jnp.asarray(X), jnp.asarray(y), C=1.0, qp_iters=800)
+    assert float(csvm.csvm_risk(w, b, jnp.asarray(X), jnp.asarray(y))) == 0.0
+
+
+def test_fully_connected_consensus_matches_pooled_csvm():
+    """On a fully-connected graph with enough iterations, every node's
+    single-task DSVM classifier approaches the pooled (centralized) one —
+    the standard consensus-SVM sanity check."""
+    V, p = 4, 10
+    rng = np.random.default_rng(5)
+    d = rng.normal(size=p)
+    d /= np.linalg.norm(d)
+    X, y = synthetic.sample_task(rng, d, 120, 120, noise=0.8, margin=1.0)
+    Xs = X.reshape(V, 1, -1, p)
+    ys = y.reshape(V, 1, -1)
+    A = graph.full(V)
+    prob = dsvm.make_dsvm_problem(Xs, ys, None, A, C=0.05)
+    st, _ = dtsvm.run_dtsvm(prob, 120, qp_iters=150)
+    w_c, b_c = csvm.csvm_fit(jnp.asarray(X), jnp.asarray(y),
+                             C=0.05 * V, qp_iters=2000)
+    # compare decision boundaries via test-risk agreement
+    Xt, yt = synthetic.sample_task(rng, d, 300, 300, noise=0.8, margin=1.0)
+    risk_c = float(csvm.csvm_risk(w_c, b_c, jnp.asarray(Xt), jnp.asarray(yt)))
+    risks_d = np.asarray(dtsvm.risks(
+        st.r, jnp.broadcast_to(jnp.asarray(Xt)[None, None], (V, 1) + Xt.shape),
+        jnp.broadcast_to(jnp.asarray(yt)[None, None], (V, 1) + yt.shape)))
+    assert abs(risks_d.mean() - risk_c) < 0.03, (risks_d.mean(), risk_c)

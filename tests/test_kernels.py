@@ -1,0 +1,105 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode on CPU): shape/dtype
+sweeps per the deliverable-(c) requirement."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import gram as gram_kernel
+from repro.kernels import qp_step as qp_kernel
+from repro.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+@pytest.mark.parametrize("n,d", [(1, 1), (5, 3), (37, 11), (128, 11),
+                                 (130, 20), (300, 64), (513, 7)])
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_gram_kernel_matches_ref(n, d, dtype):
+    Z = RNG.normal(size=(n, d)).astype(dtype)
+    a = RNG.uniform(0.1, 2.0, size=(d,)).astype(dtype)
+    out = gram_kernel.weighted_gram_2d(jnp.asarray(Z, jnp.float32),
+                                       jnp.asarray(a, jnp.float32),
+                                       interpret=True)
+    want = ref.weighted_gram(jnp.asarray(Z, jnp.float32),
+                             jnp.asarray(a, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+    assert out.shape == (n, n)
+
+
+@pytest.mark.parametrize("block", [8, 64, 256])
+def test_gram_kernel_block_sizes(block):
+    Z = RNG.normal(size=(100, 11)).astype(np.float32)
+    a = RNG.uniform(0.1, 2.0, size=(11,)).astype(np.float32)
+    out = gram_kernel.weighted_gram_2d(jnp.asarray(Z), jnp.asarray(a),
+                                       block=block, interpret=True)
+    want = ref.weighted_gram(jnp.asarray(Z), jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_gram_psd():
+    Z = RNG.normal(size=(60, 11)).astype(np.float32)
+    a = RNG.uniform(0.1, 2.0, size=(11,)).astype(np.float32)
+    K = np.asarray(gram_kernel.weighted_gram_2d(
+        jnp.asarray(Z), jnp.asarray(a), interpret=True))
+    ev = np.linalg.eigvalsh(K.astype(np.float64))
+    assert ev.min() > -1e-4
+
+
+@pytest.mark.parametrize("n", [1, 7, 64, 200, 400, 513])
+@pytest.mark.parametrize("gamma", [0.01, 0.5])
+def test_qp_step_kernel_matches_ref(n, gamma):
+    A = RNG.normal(size=(n, n)).astype(np.float32)
+    K = (A @ A.T / max(n, 1)).astype(np.float32)
+    q = RNG.normal(size=n).astype(np.float32)
+    hi = RNG.uniform(0.0, 1.0, size=n).astype(np.float32)
+    lam = (RNG.uniform(0, 1, size=n) * hi).astype(np.float32)
+    out = qp_kernel.qp_pg_step_1d(jnp.asarray(lam), jnp.asarray(K),
+                                  jnp.asarray(q), jnp.asarray(hi), gamma,
+                                  interpret=True)
+    want = ref.qp_pg_step(jnp.asarray(lam), jnp.asarray(K), jnp.asarray(q),
+                          jnp.asarray(hi), gamma)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_qp_step_kernel_projects_into_box():
+    n = 96
+    K = np.eye(n, dtype=np.float32)
+    q = np.full(n, 100.0, np.float32)          # pushes far above the box
+    hi = RNG.uniform(0.1, 0.5, size=n).astype(np.float32)
+    lam = np.zeros(n, np.float32)
+    out = np.asarray(qp_kernel.qp_pg_step_1d(
+        jnp.asarray(lam), jnp.asarray(K), jnp.asarray(q), jnp.asarray(hi),
+        1.0, interpret=True))
+    np.testing.assert_allclose(out, hi, rtol=1e-6)
+
+
+def test_qp_iterated_kernel_solves_qp():
+    """Iterating the fused kernel step must converge to the QP optimum."""
+    from helpers import brute_force_box_qp
+    n = 50
+    A = RNG.normal(size=(n, n)).astype(np.float32)
+    K = (A @ A.T / n).astype(np.float32)
+    q = RNG.normal(size=n).astype(np.float32)
+    hi = np.full(n, 1.0, np.float32)
+    gamma = 1.0 / max(np.abs(K).sum(1).max(), 1e-9)
+    lam = jnp.zeros(n, jnp.float32)
+    for _ in range(600):
+        lam = qp_kernel.qp_pg_step_1d(lam, jnp.asarray(K), jnp.asarray(q),
+                                      jnp.asarray(hi), gamma, interpret=True)
+    want = brute_force_box_qp(K, q, hi)
+    np.testing.assert_allclose(np.asarray(lam), want, atol=5e-4)
+
+
+def test_ops_dispatch_batched(monkeypatch):
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    from repro.kernels import ops
+    Z = RNG.normal(size=(2, 3, 40, 11)).astype(np.float32)
+    a = RNG.uniform(0.1, 2, size=(2, 3, 11)).astype(np.float32)
+    out = ops.weighted_gram(jnp.asarray(Z), jnp.asarray(a))
+    want = ref.weighted_gram(jnp.asarray(Z), jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=3e-5, atol=3e-5)

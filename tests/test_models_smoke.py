@@ -1,0 +1,186 @@
+"""Per-architecture smoke tests (deliverable f): a REDUCED variant of each
+assigned family runs one forward/train step on CPU with exact output shapes
+and finite values, plus prefill->decode consistency (which cross-checks the
+fancy decode paths — SSD recurrence, MLA absorption, ring caches — against
+the full-sequence forward)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_reduced_config
+from repro.configs.base import InputShape
+from repro.models import model as model_lib
+from repro.models import transformer
+from repro.train import steps as steps_lib
+
+TRAIN = InputShape("smoke_train", 64, 2, "train")
+PREFILL = InputShape("smoke_prefill", 64, 2, "prefill")
+DECODE = InputShape("smoke_decode", 64, 2, "decode")
+
+
+def _reduced_ok(cfg):
+    assert cfg.num_layers <= 4
+    assert cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_and_shapes(arch):
+    cfg = get_reduced_config(arch)
+    _reduced_ok(cfg)
+    rng = jax.random.key(0)
+    params = model_lib.init_params(cfg, rng, TRAIN)
+    batch = model_lib.make_inputs(cfg, TRAIN, rng)
+    logits, loss = transformer.forward_train(params, batch, cfg)
+    St = batch["tokens"].shape[1]
+    assert logits.shape == (2, St, cfg.vocab_size)
+    assert bool(jnp.isfinite(loss))
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_one_train_step(arch):
+    cfg = get_reduced_config(arch)
+    rng = jax.random.key(1)
+    state = steps_lib.make_train_state(cfg, rng, TRAIN, lr=1e-3)
+    step = jax.jit(steps_lib.make_train_step(cfg, lr=1e-3))
+    batch = model_lib.make_inputs(cfg, TRAIN, rng)
+    new_state, metrics = step(state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    assert bool(jnp.isfinite(metrics["grad_norm"]))
+    # parameters actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                           b.astype(jnp.float32)))),
+        state["params"], new_state["params"])
+    assert max(jax.tree.leaves(moved)) > 0.0
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_loss_decreases(arch):
+    cfg = get_reduced_config(arch)
+    rng = jax.random.key(2)
+    state = steps_lib.make_train_state(cfg, rng, TRAIN, lr=3e-3)
+    step = jax.jit(steps_lib.make_train_step(cfg, lr=3e-3))
+    batch = model_lib.make_inputs(cfg, TRAIN, rng)   # fixed batch: must fit
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """logits(prefill(S tokens)) == logits(forward at position S-1) and one
+    decode step afterwards matches forward at position S.  This exercises
+    the SSD chunked<->recurrent equivalence (mamba/zamba), MLA absorbed
+    decode (deepseek) and the ring KV caches."""
+    cfg = get_reduced_config(arch)
+    if cfg.use_mla:
+        # the absorbed-matrix MLA decode reorders the contraction; prove
+        # algebraic equivalence in fp32 (bf16 rounding differs by design)
+        cfg = cfg.replace(compute_dtype="float32")
+    rng = jax.random.key(3)
+    params = model_lib.init_params(cfg, rng, TRAIN)
+    batch = model_lib.make_inputs(cfg, TRAIN, rng)
+    tokens = batch["tokens"]                          # (2, St)
+    St = tokens.shape[1]
+
+    logits_full, _ = transformer.forward_train(params, batch, cfg)
+
+    pre_batch = dict(batch)
+    del pre_batch["targets"]
+    pre_batch["tokens"] = tokens[:, :-1]
+    n_prefix = cfg.num_prefix_tokens if cfg.frontend == "vision" else 0
+    logits_pre, cache = transformer.prefill(params, pre_batch, cfg,
+                                            min_cache_len=St + n_prefix)
+    np.testing.assert_allclose(
+        np.asarray(logits_pre[:, -1], np.float32),
+        np.asarray(logits_full[:, -2], np.float32), rtol=2e-2, atol=2e-2)
+
+    idx = jnp.int32(St - 1 + n_prefix)
+    logits_dec, _ = transformer.decode(
+        params, {"tokens": tokens[:, -1:]}, cache, idx, cfg)
+    np.testing.assert_allclose(
+        np.asarray(logits_dec[:, 0], np.float32),
+        np.asarray(logits_full[:, -1], np.float32), rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("arch", ["gemma2-2b", "mamba2-130m", "zamba2-1.2b",
+                                  "gemma3-12b"])
+def test_long_mode_decode_runs(arch):
+    """Archs that run long_500k must decode in long-context (windowed/SSM)
+    mode."""
+    cfg = get_reduced_config(arch)
+    rng = jax.random.key(4)
+    params = model_lib.init_params(cfg, rng, DECODE)
+    cache = transformer.cache_init(cfg, 2, 512, jnp.bfloat16, True)
+    logits, new_cache = transformer.decode(
+        params, {"tokens": jnp.zeros((2, 1), jnp.int32)}, cache,
+        jnp.int32(500), cfg, long_mode=True)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_ring_cache_wraps():
+    """Windowed decode past the cache capacity must overwrite oldest slots
+    and still agree with a full-cache run restricted to the window."""
+    cfg = get_reduced_config("gemma2-2b").replace(layer_pattern=("local",),
+                                                  sliding_window=8)
+    rng = jax.random.key(5)
+    params = model_lib.init_params(cfg, rng, DECODE)
+    toks = jax.random.randint(rng, (1, 24), 0, cfg.vocab_size, jnp.int32)
+
+    # run with a tight ring cache (cache_len = window)
+    small = transformer.cache_init(cfg, 1, 8, jnp.float32, False)
+    # run with a roomy cache (no wrap)
+    big = transformer.cache_init(cfg, 1, 64, jnp.float32, False)
+    cfg32 = cfg.replace(compute_dtype="float32")
+    for i in range(24):
+        tok = toks[:, i:i + 1]
+        l_small, small = transformer.decode(params, {"tokens": tok}, small,
+                                            jnp.int32(i), cfg32)
+        l_big, big = transformer.decode(params, {"tokens": tok}, big,
+                                        jnp.int32(i), cfg32)
+        np.testing.assert_allclose(np.asarray(l_small), np.asarray(l_big),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_vlm_prefix_handling():
+    cfg = get_reduced_config("internvl2-2b")
+    rng = jax.random.key(6)
+    params = model_lib.init_params(cfg, rng, TRAIN)
+    batch = model_lib.make_inputs(cfg, TRAIN, rng)
+    assert batch["tokens"].shape[1] == 64 - cfg.num_prefix_tokens
+    logits, loss = transformer.forward_train(params, batch, cfg)
+    assert logits.shape[1] == batch["tokens"].shape[1]
+    # vision embeddings must influence the text logits
+    batch2 = dict(batch)
+    batch2["vision_embeds"] = batch["vision_embeds"] + 1.0
+    logits2, _ = transformer.forward_train(params, batch2, cfg)
+    assert float(jnp.max(jnp.abs(logits - logits2))) > 1e-3
+
+
+def test_moe_router_balance_loss_positive():
+    cfg = get_reduced_config("phi3.5-moe-42b-a6.6b")
+    from repro.models import moe as moe_lib
+    rng = jax.random.key(7)
+    p = moe_lib.moe_init(rng, cfg)
+    x = jax.random.normal(rng, (2, 16, cfg.d_model), jnp.float32)
+    y, aux = moe_lib.moe_apply(p, x, cfg)
+    assert y.shape == x.shape
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_dropping_is_bounded():
+    """With capacity_factor=1.0 and a uniform router, dropped tokens are
+    rare; the output stays finite and near the dense-compute scale."""
+    cfg = get_reduced_config("phi3.5-moe-42b-a6.6b")
+    from repro.models import moe as moe_lib
+    rng = jax.random.key(8)
+    p = moe_lib.moe_init(rng, cfg)
+    x = jax.random.normal(rng, (4, 64, cfg.d_model), jnp.float32)
+    y, _ = moe_lib.moe_apply(p, x, cfg, capacity_factor=1.0)
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(jnp.mean(jnp.abs(y))) > 0.0

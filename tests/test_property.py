@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph, qp as qp_lib
+from repro.kernels import ref
+from repro.models import ssm
+
+SET = settings(max_examples=25, deadline=None)
+
+
+@SET
+@given(n=st.integers(2, 24), seed=st.integers(0, 10_000),
+       box=st.floats(0.01, 5.0))
+def test_qp_iterates_stay_in_box(n, seed, box):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    K = A @ A.T / n
+    q = rng.normal(size=n).astype(np.float32)
+    hi = np.full(n, box, np.float32)
+    lam = qp_lib.solve_box_qp_fista(jnp.asarray(K), jnp.asarray(q),
+                                    jnp.asarray(hi), iters=60)
+    assert float(jnp.min(lam)) >= -1e-7
+    assert float(jnp.max(lam)) <= box + 1e-6
+
+
+@SET
+@given(n=st.integers(2, 20), seed=st.integers(0, 10_000))
+def test_qp_objective_never_decreases_under_pg(n, seed):
+    """Projected gradient with a 1/L step is an ascent method on the
+    concave dual — the objective is monotonically non-decreasing."""
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    K = jnp.asarray(A @ A.T / n)
+    q = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    hi = jnp.asarray(np.full(n, 1.0, np.float32))
+    gamma = 1.0 / max(float(jnp.max(jnp.sum(jnp.abs(K), 1))), 1e-9)
+    lam = jnp.zeros(n)
+    prev = float(qp_lib.qp_objective(K, q, lam))
+    for _ in range(20):
+        lam = ref.qp_pg_step(lam, K, q, hi, gamma)
+        cur = float(qp_lib.qp_objective(K, q, lam))
+        assert cur >= prev - 1e-5
+        prev = cur
+
+
+@SET
+@given(n=st.integers(1, 40), d=st.integers(1, 16), seed=st.integers(0, 9999))
+def test_weighted_gram_psd_and_symmetric(n, d, seed):
+    rng = np.random.default_rng(seed)
+    Z = rng.normal(size=(n, d)).astype(np.float32)
+    a = rng.uniform(0.01, 3.0, size=d).astype(np.float32)
+    K = np.asarray(ref.weighted_gram(jnp.asarray(Z), jnp.asarray(a)))
+    np.testing.assert_allclose(K, K.T, atol=1e-5)
+    ev = np.linalg.eigvalsh(K.astype(np.float64))
+    assert ev.min() > -1e-4
+
+
+@SET
+@given(V=st.integers(2, 30), degree=st.floats(0.0, 1.0),
+       seed=st.integers(0, 1000))
+def test_random_graph_properties(V, degree, seed):
+    A = graph.random_graph(V, degree, seed)
+    assert A.shape == (V, V)
+    assert (A == A.T).all()
+    assert not A.diagonal().any()
+    assert graph.is_connected(A)
+    # at least ring-dense
+    assert graph.network_degree(A) >= graph.network_degree(graph.ring(V)) - 1e-9
+
+
+@SET
+@given(seed=st.integers(0, 10_000), S=st.sampled_from([16, 32, 64]),
+       chunk=st.sampled_from([8, 16, 32]))
+def test_ssd_chunk_invariance(seed, S, chunk):
+    """SSD output must not depend on the chunk size (block decomposition
+    identity) — the core algebra of state-space duality."""
+    rng = np.random.default_rng(seed)
+    B, H, P, N = 1, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, 1, N)), jnp.float32)
+    y1, h1 = ssm.ssd_chunked(x, dt, A, Bm, Cm, min(chunk, S))
+    y2, h2 = ssm.ssd_chunked(x, dt, A, Bm, Cm, S)   # single chunk
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=2e-3, atol=2e-3)
+
+
+@SET
+@given(seed=st.integers(0, 10_000))
+def test_ssd_matches_naive_recurrence(seed):
+    """Chunked SSD == step-by-step linear recurrence (paper's duality)."""
+    rng = np.random.default_rng(seed)
+    B, S, H, P, N = 1, 24, 2, 3, 5
+    x = rng.normal(size=(B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.01, 0.3, size=(B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, size=(H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, 1, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, 1, N)).astype(np.float32)
+    y, hT = ssm.ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                            jnp.asarray(Bm), jnp.asarray(Cm), chunk=8)
+    # naive
+    h = np.zeros((B, H, P, N))
+    ys = np.zeros((B, S, H, P))
+    for s in range(S):
+        dA = np.exp(dt[:, s] * A[None])                      # (B,H)
+        Bs = np.repeat(Bm[:, s], H, axis=1)                   # (B,H,N)
+        Cs = np.repeat(Cm[:, s], H, axis=1)
+        h = h * dA[..., None, None] + \
+            (dt[:, s][..., None, None] * x[:, s][..., None]) * Bs[:, :, None, :]
+        ys[:, s] = np.einsum("bhpn,bhn->bhp", h, Cs)
+    np.testing.assert_allclose(np.asarray(y), ys, rtol=3e-3, atol=3e-3)
+    np.testing.assert_allclose(np.asarray(hT), h, rtol=3e-3, atol=3e-3)
+
+
+@SET
+@given(seed=st.integers(0, 1000), V=st.integers(2, 8), T=st.integers(1, 3))
+def test_dtsvm_step_preserves_shapes_and_finite(seed, V, T):
+    from repro.core import dtsvm
+    rng = np.random.default_rng(seed)
+    N, p = 6, 4
+    X = rng.normal(size=(V, T, N, p)).astype(np.float32)
+    y = np.sign(rng.normal(size=(V, T, N))).astype(np.float32)
+    y[y == 0] = 1.0
+    A = graph.ring(V)
+    prob = dtsvm.make_problem(X, y, None, A)
+    st = dtsvm.init_state(prob)
+    st2 = dtsvm.dtsvm_step(st, prob, qp_iters=20)
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(st2)):
+        assert a.shape == b.shape
+        assert bool(jnp.all(jnp.isfinite(b)))
+
+
+@SET
+@given(b=st.integers(1, 4), s=st.integers(1, 8), seed=st.integers(0, 1000))
+def test_rope_preserves_norm(b, s, seed):
+    from repro.models.layers import apply_rope
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(b, s, 2, 8)), jnp.float32)
+    pos = jnp.arange(s)
+    y = apply_rope(x, pos, 10_000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)

@@ -1,0 +1,80 @@
+"""Box-QP solver correctness (the dual sub-problem of Prop. 1)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import brute_force_box_qp
+from repro.core import qp as qp_lib
+
+
+def _rand_problem(rng, n, box=1.0):
+    A = rng.normal(size=(n, n))
+    K = (A @ A.T / n).astype(np.float32)
+    q = rng.normal(size=n).astype(np.float32)
+    hi = np.full(n, box, np.float32)
+    return K, q, hi
+
+
+@pytest.mark.parametrize("n", [3, 10, 50])
+@pytest.mark.parametrize("solver", [qp_lib.solve_box_qp_pg,
+                                    qp_lib.solve_box_qp_fista])
+def test_matches_oracle(n, solver):
+    rng = np.random.default_rng(n)
+    K, q, hi = _rand_problem(rng, n)
+    lam = solver(jnp.asarray(K), jnp.asarray(q), jnp.asarray(hi), iters=3000)
+    ref = brute_force_box_qp(K, q, hi)
+    np.testing.assert_allclose(np.asarray(lam), ref, atol=2e-4)
+
+
+@pytest.mark.parametrize("solver", [qp_lib.solve_box_qp_pg,
+                                    qp_lib.solve_box_qp_fista])
+def test_kkt_residual_small(solver):
+    rng = np.random.default_rng(0)
+    K, q, hi = _rand_problem(rng, 30)
+    lam = solver(jnp.asarray(K), jnp.asarray(q), jnp.asarray(hi), iters=3000)
+    res = qp_lib.kkt_residual(jnp.asarray(K), jnp.asarray(q),
+                              jnp.asarray(hi), lam)
+    assert float(res) < 1e-3
+
+
+def test_box_feasibility():
+    rng = np.random.default_rng(1)
+    K, q, hi = _rand_problem(rng, 25, box=0.3)
+    lam = qp_lib.solve_box_qp_fista(jnp.asarray(K), jnp.asarray(q),
+                                    jnp.asarray(hi), iters=50)
+    assert float(jnp.min(lam)) >= 0.0
+    assert float(jnp.max(lam)) <= 0.3 + 1e-7
+
+
+def test_zero_box_pins_padding():
+    """hi=0 rows (padding / inactive tasks) must keep lam=0."""
+    rng = np.random.default_rng(2)
+    K, q, hi = _rand_problem(rng, 20)
+    hi[10:] = 0.0
+    lam = qp_lib.solve_box_qp_fista(jnp.asarray(K), jnp.asarray(q),
+                                    jnp.asarray(hi), iters=500)
+    np.testing.assert_allclose(np.asarray(lam)[10:], 0.0, atol=1e-9)
+
+
+def test_unconstrained_interior_solution():
+    """With a huge box the solution solves K lam = q when interior."""
+    rng = np.random.default_rng(3)
+    A = rng.normal(size=(8, 8))
+    K = (A @ A.T + 8 * np.eye(8)).astype(np.float32)
+    lam_true = rng.uniform(0.2, 0.8, 8).astype(np.float32)
+    q = K @ lam_true
+    lam = qp_lib.solve_box_qp_fista(jnp.asarray(K), jnp.asarray(q),
+                                    jnp.asarray(np.full(8, 10.0, np.float32)),
+                                    iters=4000)
+    np.testing.assert_allclose(np.asarray(lam), lam_true, atol=1e-3)
+
+
+def test_warm_start_converges_faster():
+    rng = np.random.default_rng(4)
+    K, q, hi = _rand_problem(rng, 40)
+    Kj, qj, hij = map(jnp.asarray, (K, q, hi))
+    lam_star = qp_lib.solve_box_qp_fista(Kj, qj, hij, iters=5000)
+    cold = qp_lib.solve_box_qp_fista(Kj, qj, hij, iters=25)
+    warm = qp_lib.solve_box_qp_fista(Kj, qj, hij, iters=25, lam0=lam_star)
+    obj = lambda lam: float(qp_lib.qp_objective(Kj, qj, lam))
+    assert obj(warm) >= obj(cold) - 1e-6

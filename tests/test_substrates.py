@@ -1,0 +1,218 @@
+"""Substrate tests: sharding policy, optimizer, data, checkpoint, graph,
+multitask decomposition."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.core import graph, multitask
+from repro.data import synthetic
+from repro.dist import sharding as shp
+from repro.optim import adamw, apply_updates, clip_by_global_norm, \
+    cosine_schedule, sgd
+from repro import checkpoint as ckpt
+
+
+# ---------------------------------------------------------------------------
+# sharding policy
+# ---------------------------------------------------------------------------
+class _FakeMesh:
+    def __init__(self, shape):
+        self.shape = shape
+
+
+MESH1 = _FakeMesh({"data": 16, "model": 16})
+MESH2 = _FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def _spec_dims_divide(spec, shape, mesh):
+    for dim, ax in enumerate(spec):
+        if ax is None:
+            continue
+        size = shp.axis_size(mesh, ax if isinstance(ax, tuple) else (ax,))
+        assert shape[dim] % size == 0, (spec, shape, dim, ax)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mesh", [MESH1, MESH2])
+def test_param_policy_always_divisible(arch, mesh):
+    """Every spec the policy emits must divide the dim it shards — GSPMD
+    would otherwise pad (or worse)."""
+    from repro.models import model as model_lib
+    cfg = get_config(arch)
+    shapes = model_lib.param_specs(cfg)
+    specs = shp.param_specs(shapes, mesh, shp.ctx_for(cfg))
+    flat_shapes = jax.tree.leaves(shapes)
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for s, sp in zip(flat_shapes, flat_specs):
+        _spec_dims_divide(sp, s.shape, mesh)
+
+
+def test_policy_places_experts_on_model():
+    from repro.models import model as model_lib
+    cfg = get_config("deepseek-v2-236b")
+    shapes = model_lib.param_specs(cfg)
+    specs = shp.param_specs(shapes, MESH1, shp.ctx_for(cfg))
+    up = specs["layers"]["moe"]["up"]
+    assert up[1] == "model"          # expert dim (after the stacked L axis)
+    assert up[2] is not None         # fsdp on the contracting dim
+
+
+def test_policy_tp_for_divisible_heads_only():
+    from repro.models import model as model_lib
+    # qwen2.5-32b: 40 heads % 16 != 0 -> wq output NOT model-sharded
+    cfg = get_config("qwen2.5-32b")
+    specs = shp.param_specs(model_lib.param_specs(cfg), MESH1,
+                            shp.ctx_for(cfg))
+    assert specs["layers"]["attn"]["wq"][2] is None
+    # internvl2: 16 heads % 16 == 0 -> column-parallel wq
+    cfg = get_config("internvl2-2b")
+    specs = shp.param_specs(model_lib.param_specs(cfg), MESH1,
+                            shp.ctx_for(cfg))
+    assert specs["layers"]["attn"]["wq"][2] == "model"
+
+
+def test_batch_axes_fallbacks():
+    assert shp.batch_axes(MESH2, 256) == ("pod", "data")
+    assert shp.batch_axes(MESH2, 16) == ("data",)
+    assert shp.batch_axes(MESH2, 1) is None
+    assert shp.batch_axes(MESH1, 32) == ("data",)
+
+
+def test_cache_specs_long_context_shards_seq():
+    from repro.configs.base import SHAPES
+    from repro.models import model as model_lib
+    cfg = get_config("gemma2-2b")
+    specs_in = model_lib.input_specs(cfg, SHAPES["long_500k"])
+    cspec = shp.cache_specs(specs_in["cache"], MESH1, 1)
+    k_spec = cspec["layers"]["k"]
+    assert k_spec[2] == "data"       # (L, B=1, S, K, hd): seq over data
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_minimizes_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray([3.0, -2.0, 1.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        upd, state = opt.update(grads, state, params)
+        params = apply_updates(params, upd)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 1e-2
+
+
+def test_sgd_and_clip():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert abs(float(jnp.linalg.norm(clipped["a"])) - 1.0) < 1e-5
+    assert float(norm) > 1.0
+
+
+def test_cosine_schedule_bounds():
+    fn = cosine_schedule(1e-3, warmup=10, total=100, floor=1e-5)
+    vals = [float(fn(jnp.int32(s))) for s in range(0, 100, 5)]
+    assert max(vals) <= 1e-3 + 1e-9
+    assert vals[0] < vals[2]            # warmup rises
+    assert vals[-1] < vals[3]           # decays
+
+
+# ---------------------------------------------------------------------------
+# data
+# ---------------------------------------------------------------------------
+def test_multitask_data_regimes():
+    n = np.array([[10, 50], [0, 50], [10, 0]])
+    pos = np.array([[0.2, 0.5], [0.5, 0.5], [1.0, 0.5]])
+    d = synthetic.make_multitask_data(V=3, T=2, n_train=n, n_test=100,
+                                      pos_frac=pos, seed=0)
+    assert d["X"].shape == (3, 2, 50, 10)
+    assert d["mask"][0, 0].sum() == 10
+    assert d["mask"][1, 0].sum() == 0
+    assert d["mask"][2, 1].sum() == 0
+    # unbalanced labels honored
+    y00 = d["y"][0, 0][d["mask"][0, 0] > 0]
+    assert (y00 > 0).sum() == 2
+    y20 = d["y"][2, 0][d["mask"][2, 0] > 0]
+    assert (y20 > 0).all()
+
+
+def test_relatedness_controls_task_similarity():
+    n = np.full((2, 2), 100, int)
+    hi = synthetic.make_multitask_data(V=2, T=2, n_train=n, n_test=10,
+                                       relatedness=1.0, seed=0)
+    lo = synthetic.make_multitask_data(V=2, T=2, n_train=n, n_test=10,
+                                       relatedness=0.0, seed=0)
+    cos_hi = abs(float(hi["dirs"][0] @ hi["dirs"][1]))
+    cos_lo = abs(float(lo["dirs"][0] @ lo["dirs"][1]))
+    assert cos_hi > 0.999
+    assert cos_lo < 0.9
+
+
+def test_token_stream_deterministic():
+    a = next(synthetic.token_stream(0, 100, 2, 8))
+    b = next(synthetic.token_stream(0, 100, 2, 8))
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_array_equal(np.asarray(a["tokens"][:, 1:]),
+                                  np.asarray(a["targets"][:, :-1]))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(5, dtype=jnp.int32),
+            "b": {"c": jnp.ones((2, 3), jnp.bfloat16), "d": 3, "e": "x"},
+            "t": (jnp.zeros(2), [jnp.ones(1)])}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "x.msgpack")
+        ckpt.save(path, tree)
+        back = ckpt.load(path)
+    assert back["b"]["d"] == 3 and back["b"]["e"] == "x"
+    np.testing.assert_array_equal(np.asarray(back["a"]), np.arange(5))
+    assert back["b"]["c"].dtype == jnp.bfloat16
+    assert isinstance(back["t"], tuple)
+
+
+def test_checkpoint_latest_tracking():
+    with tempfile.TemporaryDirectory() as d:
+        assert ckpt.latest_step(d) is None
+        ckpt.save_step(d, 10, {"w": jnp.ones(2)})
+        ckpt.save_step(d, 20, {"w": jnp.full(2, 2.0)})
+        step, tree = ckpt.restore_latest(d)
+        assert step == 20
+        assert float(tree["w"][0]) == 2.0
+
+
+# ---------------------------------------------------------------------------
+# graph + multitask
+# ---------------------------------------------------------------------------
+def test_graph_kinds():
+    assert graph.network_degree(graph.full(7)) == 1.0
+    r = graph.ring(6)
+    assert r.sum() == 12
+    assert graph.is_connected(r)
+    with pytest.raises(ValueError):
+        graph.make_graph("hypercube", 4)
+
+
+def test_multitask_combine_and_grads():
+    params = {"w": jnp.ones((3,)), "b": jnp.zeros(())}
+    mt = multitask.init(params, num_tasks=2)
+    eff = multitask.combine(mt, 0)
+    np.testing.assert_allclose(np.asarray(eff["w"]), 1.0)
+    g = jax.tree.map(lambda d: jnp.ones_like(d), mt.task)
+    split = multitask.split_grads(g, mt, eps1=0.1, eps2=0.2)
+    # dL/dw0 = sum_t g_t + eps1 * w0 = 2 + 0.1
+    np.testing.assert_allclose(np.asarray(split.shared["w"]), 2.1, rtol=1e-6)
+    # dL/dwt = g_t + eps2 * wt = 1 + 0
+    np.testing.assert_allclose(np.asarray(split.task["w"]), 1.0, rtol=1e-6)
+    reg = multitask.regularizer(mt, 1.0, 1.0)
+    assert float(reg) == pytest.approx(0.5 * 3.0)
