@@ -4,6 +4,9 @@ Every figure benchmark reproduces one experiment of the paper on the
 MNIST-proxy generator (DESIGN.md data gate) and reports the figure's
 qualitative claim as a derived metric.  ``--fast`` shrinks repeat counts,
 not the experimental structure.
+
+All solver execution goes through ``repro.api`` — the figure drivers never
+touch problem construction or test-set broadcasting themselves.
 """
 from __future__ import annotations
 
@@ -15,11 +18,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
+try:
+    import repro  # noqa: F401  (pip install -e .)
+except ModuleNotFoundError:  # fallback: run from a bare checkout
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
 
-from repro.core import csvm, dsvm, dtsvm, graph          # noqa: E402
-from repro.data import synthetic                          # noqa: E402
+from repro.api import CSVM, DSVM, DTSVM, SolverConfig      # noqa: E402
+from repro.api import evaluate                              # noqa: E402
+from repro.core import graph                                # noqa: E402
+from repro.data import synthetic                            # noqa: E402
 
 RESULTS = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "results")
@@ -44,56 +52,52 @@ def build(V, n_per_task, *, T=None, degree=0.8, graph_kind="random",
     return data, A
 
 
-def risk_eval(data, V, T):
-    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
-                           (V, T) + data["X_test"].shape[1:])
-    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
-                           (V, T) + data["y_test"].shape[1:])
-    return lambda st: dtsvm.risks(st.r, Xte, yte)
+def solver_config(*, iters, eps1=1.0, eps2=1.0, C_=C, qp_iters=100):
+    return SolverConfig(C=C_, eps1=eps1, eps2=eps2, eta1=ETA1, eta2=ETA2,
+                        iters=iters, qp_iters=qp_iters)
+
+
+def _timed_fit(solver, data, A, *, active=None, couple=None,
+               with_history=True, state=None):
+    """Time the ADMM run only: data transfer and test-set broadcast happen
+    before t0, so the reported dt/iter stays comparable across PRs."""
+    V = data["X"].shape[0]
+    X = jnp.asarray(data["X"], jnp.float32)
+    y = jnp.asarray(data["y"], jnp.float32)
+    mask = jnp.asarray(data["mask"], jnp.float32)
+    ev = evaluate.risk_eval_fn(V, data["X_test"], data["y_test"]) \
+        if with_history else None
+    jax.block_until_ready(X)
+    t0 = time.time()
+    solver.fit(X, y, mask=mask, adj=A, active=active, couple=couple,
+               state=state, eval_fn=ev)
+    jax.block_until_ready(solver.state_.r)
+    dt = time.time() - t0
+    hist = None if solver.history_ is None else np.asarray(solver.history_)
+    return solver.state_, hist, dt, solver.problem_
 
 
 def run_dtsvm(data, A, iters, *, eps1=1.0, eps2=1.0, C_=C, qp_iters=100,
               active=None, couple=None, with_history=True, state=None):
-    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A, C=C_,
-                              eps1=eps1, eps2=eps2, eta1=ETA1, eta2=ETA2,
-                              active=active, couple=couple)
-    V, T = prob.X.shape[:2]
-    ev = risk_eval(data, V, T) if with_history else None
-    t0 = time.time()
-    st, hist = dtsvm.run_dtsvm(prob, iters, qp_iters=qp_iters,
-                               eval_fn=ev, state=state)
-    jax.block_until_ready(st.r)
-    dt = time.time() - t0
-    return st, (np.asarray(hist) if hist is not None else None), dt, prob
+    solver = DTSVM(solver_config(iters=iters, eps1=eps1, eps2=eps2, C_=C_,
+                                 qp_iters=qp_iters))
+    return _timed_fit(solver, data, A, active=active, couple=couple,
+                      with_history=with_history, state=state)
 
 
 def run_dsvm(data, A, iters, *, eps2=1.0, C_=C, qp_iters=100,
              active=None, with_history=True):
-    prob = dsvm.make_dsvm_problem(data["X"], data["y"], data["mask"], A,
-                                  C=C_, eps2=eps2, active=active)
-    V, T = prob.X.shape[:2]
-    ev = risk_eval(data, V, T) if with_history else None
-    t0 = time.time()
-    st, hist = dtsvm.run_dtsvm(prob, iters, qp_iters=qp_iters, eval_fn=ev)
-    jax.block_until_ready(st.r)
-    dt = time.time() - t0
-    return st, (np.asarray(hist) if hist is not None else None), dt, prob
+    solver = DSVM(solver_config(iters=iters, eps2=eps2, C_=C_,
+                                qp_iters=qp_iters))
+    return _timed_fit(solver, data, A, active=active,
+                      with_history=with_history)
 
 
 def run_csvm_per_task(data, *, C_scale=1.0, qp_iters=600):
     """Pooled centralized SVM per task."""
-    V, T, N, p = data["X"].shape
-    out = []
-    for t in range(T):
-        Xp = data["X"][:, t].reshape(-1, p)
-        yp = data["y"][:, t].reshape(-1)
-        mp = data["mask"][:, t].reshape(-1)
-        w, b = csvm.csvm_fit(jnp.asarray(Xp), jnp.asarray(yp),
-                             C * C_scale, jnp.asarray(mp), qp_iters=qp_iters)
-        out.append(float(csvm.csvm_risk(
-            w, b, jnp.asarray(data["X_test"][t]),
-            jnp.asarray(data["y_test"][t]))))
-    return out
+    solver = CSVM(SolverConfig(C=C, qp_iters=qp_iters), C_scale=C_scale)
+    solver.fit(data["X"], data["y"], mask=data["mask"])
+    return [float(r) for r in solver.risks(data["X_test"], data["y_test"])]
 
 
 def write_csv(name: str, header: str, rows):

@@ -13,7 +13,10 @@ import argparse
 
 import numpy as np
 
-from common import build, emit, run_dsvm, run_dtsvm, write_csv
+from common import emit, run_dsvm, run_dtsvm, write_csv
+
+from repro.core import graph as graph_lib
+from repro.data import synthetic
 
 
 def _mixed_masks(V=6, src_nodes=(0, 1, 2)):
@@ -36,8 +39,6 @@ def run(fast: bool = False):
         n_train = np.zeros((V, 2), int)
         n_train[:, 0] = 4                      # scarce target everywhere
         n_train[:3, 1] = 200                   # source only at nodes 1-3
-        from repro.data import synthetic
-        from repro.core import graph as graph_lib
         data = synthetic.make_multitask_data(
             V=V, T=2, p=10, n_train=n_train, n_test=1800,
             relatedness=0.93, noise=1.3, seed=seed)

@@ -4,7 +4,9 @@ Fully connected 6-node network; per node 10/10/40 samples of Tasks 1/2/3.
 Five stages (paper): 1) all tasks independent (DSVM-style, no coupling);
 2) Task 1+3 couple; 3) Task 1 leaves; 4) Task 2+3 couple; 5) Task 2
 leaves.  The ADMM state carries across stage switches — the whole point:
-no restart is needed, only the masks change.
+no restart is needed, only the masks change.  ``repro.api.OnlineSession``
+owns exactly that, so each stage is a couple of membership events plus
+``run()``.
 
 Claims: each target task's risk drops during its coupled stage and the
 improvement persists after it leaves; the source task is never destroyed.
@@ -13,10 +15,11 @@ import argparse
 
 import numpy as np
 
-from repro.core import dtsvm, graph as graph_lib
-from repro.data import synthetic
+from common import emit, write_csv
 
-from common import emit, risk_eval, write_csv
+from repro.api import OnlineSession, SolverConfig
+from repro.core import graph as graph_lib
+from repro.data import synthetic
 
 
 def run(fast: bool = False, seed=0):
@@ -29,12 +32,13 @@ def run(fast: bool = False, seed=0):
     data = synthetic.make_multitask_data(
         V=V, T=T, p=10, n_train=n_train, n_test=1800, relatedness=0.9,
         noise=1.0, seed=seed)
-    A = graph_lib.full(V)
-    ev = risk_eval(data, V, T)
 
-    ones = np.ones((V,), np.float32)
-    zeros = np.zeros((V,), np.float32)
-    act_all = np.ones((V, T), np.float32)
+    # eps2=100 per the paper
+    sess = OnlineSession(
+        data["X"], data["y"], mask=data["mask"], adj=graph_lib.full(V),
+        config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0, qp_iters=100),
+        X_test=data["X_test"], y_test=data["y_test"],
+        couple=np.zeros(V, np.float32))
 
     def act(tasks):
         a = np.zeros((V, T), np.float32)
@@ -42,27 +46,21 @@ def run(fast: bool = False, seed=0):
             a[:, t] = 1.0
         return a
 
-    # (name, active tasks, couple on?) per stage — eps2=100 per the paper
+    # (name, active tasks, couple on?) per stage
     stages = [
-        ("s1_independent", act([0, 1, 2]), zeros),
-        ("s2_t1_with_t3", act([0, 2]), ones),
-        ("s3_t1_leaves", act([1, 2]), zeros),
-        ("s4_t2_with_t3", act([1, 2]), ones),
-        ("s5_t2_leaves", act([2]), zeros),
+        ("s1_independent", act([0, 1, 2]), False),
+        ("s2_t1_with_t3", act([0, 2]), True),
+        ("s3_t1_leaves", act([1, 2]), False),
+        ("s4_t2_with_t3", act([1, 2]), True),
+        ("s5_t2_leaves", act([2]), False),
     ]
 
-    state = None
     rows, marks = [], {}
     it = 0
     for name, active, couple in stages:
-        prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], A,
-                                  C=0.01, eps1=1.0, eps2=100.0,
-                                  active=active, couple=couple)
-        if state is None:
-            state = dtsvm.init_state(prob)
-        state, hist = dtsvm.run_dtsvm(prob, stage_iters, qp_iters=100,
-                                      state=state, eval_fn=ev)
-        h = np.asarray(hist).mean(1)           # (iters, T) global risks
+        sess.set_active(active).set_coupling(couple)
+        hist = sess.run(stage_iters)
+        h = hist.mean(1)                   # (iters, T) global risks
         for i in range(stage_iters):
             rows.append([name, it + i, h[i, 0], h[i, 1], h[i, 2]])
         it += stage_iters

@@ -7,22 +7,26 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 (arch x shape) pairs, re-derives the roofline terms per variant, and
 appends everything to results/hillclimb.jsonl.
 
-    PYTHONPATH=src python benchmarks/hillclimb.py [--pair pair1] [--variant x]
+    python benchmarks/hillclimb.py [--pair pair1] [--variant x]
 """
 import argparse
 import json
 import sys
 import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+try:
+    import repro  # noqa: F401  (pip install -e .)
+except ModuleNotFoundError:  # fallback: run from a bare checkout
+    sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src"))
 
 import jax
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
 from repro.core.consensus import ConsensusConfig
+from repro.dist import compat
 from repro.dist import sharding as shp
 from repro.launch import costs as costs_lib
 from repro.launch import dryrun
@@ -75,7 +79,7 @@ def lower_train(arch, shape_name, mesh, *, cfg_overrides=None, microbatch=0,
 def measure(arch, shape_name, name, **kw):
     mesh = mesh_lib.make_production_mesh(multi_pod=False)
     t0 = time.time()
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         cfg, shape, lowered = lower_train(arch, shape_name, mesh, **kw)
         compiled = lowered.compile()
         mem = dryrun._mem_dict(compiled.memory_analysis())

@@ -3,25 +3,24 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 # ^ 8 placeholder devices = 8 network nodes, set before jax initializes.
 
-"""Decentralized DTSVM: one device per network node (shard_map execution).
+"""Decentralized DTSVM: one device per network node, via the backend registry.
 
-Each device holds ONLY its own training shard; neighbor exchange runs as
+The SAME ``DTSVM.fit`` runs single-host (backend="vmap") or SPMD with one
+device per node (backend="shard_map"); neighbor exchange becomes
 collective_permute (ring) or adjacency-masked all_gather (random graph) —
 the TPU mapping of the paper's message passing (DESIGN.md §3).  The result
 is bit-identical to the single-host reference, which this example checks.
 
-    PYTHONPATH=src python examples/dtsvm_decentralized.py
+Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
+
+    python examples/dtsvm_decentralized.py
 """
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dtsvm, dtsvm_dist, graph
+from repro.api import DTSVM, SolverConfig
+from repro.core import graph
 from repro.data import synthetic
 
 
@@ -32,22 +31,20 @@ def main():
     n_train[:, 1] = 60
     data = synthetic.make_multitask_data(V=V, T=T, p=10, n_train=n_train,
                                          n_test=600, relatedness=0.9, seed=0)
+    cfg = SolverConfig(C=0.01, iters=25, qp_iters=80)
 
     for topology, adj in [("ring", graph.ring(V)),
                           ("graph", graph.make_graph("random", V, 0.7))]:
-        prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], adj,
-                                  C=0.01)
-        st_dist = dtsvm_dist.run_dtsvm_dist(prob, iters=25,
-                                            topology=topology, qp_iters=80)
-        st_ref, _ = jax.jit(
-            lambda p: dtsvm.run_dtsvm(p, 25, qp_iters=80))(prob)
+        ref = DTSVM(cfg).fit(data["X"], data["y"], mask=data["mask"],
+                             adj=adj)
+        dist = DTSVM(cfg.replace(
+            backend="shard_map",
+            backend_options={"topology": topology})).fit(
+                data["X"], data["y"], mask=data["mask"], adj=adj)
         err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
-                  zip(jax.tree.leaves(st_ref), jax.tree.leaves(st_dist)))
-        Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
-                               (V, T) + data["X_test"].shape[1:])
-        yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
-                               (V, T) + data["y_test"].shape[1:])
-        risks = np.asarray(dtsvm.risks(st_dist.r, Xte, yte)).mean(0)
+                  zip(jax.tree.leaves(ref.state_),
+                      jax.tree.leaves(dist.state_)))
+        risks = dist.global_risks(data["X_test"], data["y_test"])
         print(f"{topology:6s}: {V} devices, risks={risks.round(3)}, "
               f"|dist - single_host| = {err:.2e}")
 

@@ -1,18 +1,16 @@
-"""Online transfer learning (paper Fig. 7): tasks enter and leave a live
-DTSVM network without restarting — only the activity/coupling masks change
-between stages; the ADMM state carries over.
+"""Online transfer learning (paper Fig. 7) through ``repro.api.OnlineSession``:
+tasks enter and leave a live DTSVM network without restarting — the session
+carries the ADMM state across membership events; no problem rebuilding, no
+mask bookkeeping.
 
-    PYTHONPATH=src python examples/online_transfer.py
+Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
+
+    python examples/online_transfer.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
 import numpy as np
 
-from repro.core import dtsvm, graph
+from repro.api import OnlineSession, SolverConfig
+from repro.core import graph
 from repro.data import synthetic
 
 
@@ -25,41 +23,35 @@ def main():
     data = synthetic.make_multitask_data(
         V=V, T=T, p=10, n_train=n_train, n_test=900, relatedness=0.9,
         seed=0)
-    adj = graph.full(V)
 
-    import jax.numpy as jnp
-    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
-                           (V, T) + data["X_test"].shape[1:])
-    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
-                           (V, T) + data["y_test"].shape[1:])
+    sess = OnlineSession(
+        data["X"], data["y"], mask=data["mask"], adj=graph.full(V),
+        config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0, qp_iters=100),
+        X_test=data["X_test"], y_test=data["y_test"],
+        couple=np.zeros(V, np.float32))
 
-    def act(tasks):
-        a = np.zeros((V, T), np.float32)
-        for t in tasks:
-            a[:, t] = 1.0
-        return a
+    def report(name):
+        sess.run(30, record=False)
+        r = sess.global_risks()
+        print(f"{name:36s} risks t1={r[0]:.3f} t2={r[1]:.3f} t3={r[2]:.3f}")
 
-    ones = np.ones((V,), np.float32)
-    zeros = np.zeros((V,), np.float32)
-    stages = [
-        ("stage1: all independent (DSVM)", act([0, 1, 2]), zeros),
-        ("stage2: task1 joins task3 (DTSVM)", act([0, 2]), ones),
-        ("stage3: task1 leaves", act([1, 2]), zeros),
-        ("stage4: task2 joins task3 (DTSVM)", act([1, 2]), ones),
-        ("stage5: task2 leaves", act([2]), zeros),
-    ]
+    report("stage1: all independent (DSVM)")
 
-    state = None
-    for name, active, couple in stages:
-        prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], adj,
-                                  C=0.01, eps1=1.0, eps2=100.0,
-                                  active=active, couple=couple)
-        if state is None:
-            state = dtsvm.init_state(prob)
-        state, _ = dtsvm.run_dtsvm(prob, 30, qp_iters=100, state=state)
-        risks = np.asarray(dtsvm.risks(state.r, Xte, yte)).mean(0)
-        print(f"{name:36s} risks t1={risks[0]:.3f} t2={risks[1]:.3f} "
-              f"t3={risks[2]:.3f}")
+    sess.drop_task(1)                       # task 2 idles ...
+    sess.set_coupling(True)                 # ... while task 1 couples to 3
+    report("stage2: task1 joins task3 (DTSVM)")
+
+    sess.drop_task(0)                       # task 1 leaves (state persists)
+    sess.add_task(1)
+    sess.set_coupling(False)
+    report("stage3: task1 leaves")
+
+    sess.set_coupling(True)                 # task 2's turn to transfer
+    report("stage4: task2 joins task3 (DTSVM)")
+
+    sess.drop_task(1)
+    sess.set_coupling(False)
+    report("stage5: task2 leaves")
 
 
 if __name__ == "__main__":

@@ -1,21 +1,29 @@
-"""Quickstart: consensus-based distributed transfer SVM in ~40 lines.
+"""Quickstart: consensus-based distributed transfer SVM via ``repro.api``.
 
 Two related binary tasks spread over a 10-node network; the target task
 has 40 training samples TOTAL (4 per node), the source task 600.  DTSVM
 transfers knowledge through the consensus constraints — no data ever
 leaves a node — and beats per-task distributed SVM (DSVM) on the target.
 
-    PYTHONPATH=src python examples/quickstart.py
+The whole experiment is the one-line solver swap the API exists for:
+
+    DTSVM(cfg).fit(X, y, mask=mask, adj=adj)     # transfer (Prop. 1)
+    DSVM(cfg).fit(X, y, mask=mask, adj=adj)      # per-task baseline
+
+and executing the SAME fit decentralized (one device per node) is a
+config change, not a code change:
+
+    DTSVM(cfg.replace(backend="shard_map",
+                      backend_options={"topology": "ring"}))
+
+Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
+
+    python examples/quickstart.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
 import numpy as np
 
-from repro.core import dsvm, dtsvm, graph
+from repro.api import DSVM, DTSVM, SolverConfig
+from repro.core import graph
 from repro.data import synthetic
 
 
@@ -29,28 +37,19 @@ def main():
         relatedness=0.92, noise=1.0, seed=0)
     adj = graph.make_graph("random", V, degree=0.8, seed=0)
 
-    import jax.numpy as jnp
-    Xte = jnp.broadcast_to(jnp.asarray(data["X_test"])[None],
-                           (V, T) + data["X_test"].shape[1:])
-    yte = jnp.broadcast_to(jnp.asarray(data["y_test"])[None],
-                           (V, T) + data["y_test"].shape[1:])
+    cfg = SolverConfig(C=0.01, eps1=1.0, eps2=1.0, iters=60, qp_iters=100)
+    dtsvm = DTSVM(cfg).fit(data["X"], data["y"], mask=data["mask"], adj=adj)
+    dsvm = DSVM(cfg).fit(data["X"], data["y"], mask=data["mask"], adj=adj)
 
-    prob = dtsvm.make_problem(data["X"], data["y"], data["mask"], adj,
-                              C=0.01, eps1=1.0, eps2=1.0)
-    state, _ = dtsvm.run_dtsvm(prob, iters=60, qp_iters=100)
-    r_dtsvm = np.asarray(dtsvm.risks(state.r, Xte, yte)).mean(0)
-
-    prob_d = dsvm.make_dsvm_problem(data["X"], data["y"], data["mask"], adj,
-                                    C=0.01)
-    state_d, _ = dtsvm.run_dtsvm(prob_d, iters=60, qp_iters=100)
-    r_dsvm = np.asarray(dtsvm.risks(state_d.r, Xte, yte)).mean(0)
+    r_dtsvm = dtsvm.global_risks(data["X_test"], data["y_test"])
+    r_dsvm = dsvm.global_risks(data["X_test"], data["y_test"])
 
     print(f"target task:  DTSVM risk={r_dtsvm[0]:.3f}   "
           f"DSVM risk={r_dsvm[0]:.3f}   (transfer gain "
           f"{r_dsvm[0] - r_dtsvm[0]:+.3f})")
     print(f"source task:  DTSVM risk={r_dtsvm[1]:.3f}   "
           f"DSVM risk={r_dsvm[1]:.3f}")
-    tr, nr = dtsvm.consensus_residuals(state, prob)
+    tr, nr = dtsvm.residuals()
     print(f"consensus residuals: task={float(tr):.2e} node={float(nr):.2e}")
 
 

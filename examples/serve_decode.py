@@ -4,14 +4,10 @@ Drives the same prefill/decode step functions the multi-pod dry run lowers
 — here on CPU with a reduced gemma2 (sliding-window + softcap paths) and a
 reduced zamba2 (hybrid SSM + shared-attention cache paths).
 
-    PYTHONPATH=src python examples/serve_decode.py
+Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
+
+    python examples/serve_decode.py
 """
-import os
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
-
 from repro.launch import serve as serve_lib
 
 

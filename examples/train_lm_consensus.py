@@ -14,13 +14,11 @@ the standard allreduce trainer with --trainer allreduce.
 Defaults are sized for a real run (a few hundred steps); use --steps 10
 for a smoke pass on CPU.
 
-    PYTHONPATH=src python examples/train_lm_consensus.py --steps 300
+Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
+
+    python examples/train_lm_consensus.py --steps 300
 """
 import argparse
-import sys
-
-sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
-    os.path.abspath(__file__))), "src"))
 
 from repro.launch import train as train_lib
 

@@ -1,0 +1,21 @@
+"""repro.api — the single user-facing surface over the paper's solvers.
+
+    from repro.api import CSVM, DSVM, DTSVM, OnlineSession, SolverConfig
+
+- ``solvers``: one fit/predict protocol over CSVM / DSVM / DTSVM
+- ``backends``: execution-strategy registry ("vmap", "shard_map")
+- ``session``: OnlineSession for online task enter/leave (Fig. 7)
+- ``evaluate``: shared risk-curve / residual evaluation
+
+The math stays in ``repro.core`` (and keeps working unchanged); this
+package owns problem construction, execution dispatch and evaluation
+bookkeeping.  See API.md for the full tour.
+"""
+from repro.api import backends, evaluate
+from repro.api.session import OnlineSession
+from repro.api.solvers import CSVM, DSVM, DTSVM, Solver, SolverConfig
+
+__all__ = [
+    "CSVM", "DSVM", "DTSVM", "OnlineSession", "Solver", "SolverConfig",
+    "backends", "evaluate",
+]

@@ -1,0 +1,90 @@
+"""Execution backends behind ``Solver.fit``: one registry, one signature.
+
+A backend is a callable
+
+    run(prob, iters, *, qp_iters, state, eval_fn, **options)
+        -> (DTSVMState, history | None)
+
+over the SAME ``DTSVMProblem``; switching backends changes how the
+Prop.-1 iteration executes, never what it computes:
+
+- ``"vmap"``       single-host, dense-adjacency einsum neighbor sums
+                   (``repro.core.dtsvm.run_dtsvm``) — the default.
+- ``"shard_map"``  one device per network node, neighbor sums as
+                   collectives (``repro.core.dtsvm_dist``); accepts
+                   ``topology="graph" | "ring"`` and an optional ``mesh``.
+
+Both are numerically equivalent (tested); pick by config, not by import.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+from repro.core import dtsvm as core
+from repro.core import dtsvm_dist
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Register a backend runner under ``name`` (decorator)."""
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown backend {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+@register("vmap")
+def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
+              state: Optional[core.DTSVMState] = None, eval_fn=None,
+              **_ignored):
+    return core.run_dtsvm(prob, iters, qp_iters, state=state, eval_fn=eval_fn)
+
+
+@register("shard_map")
+def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
+                   qp_iters: int = 200,
+                   state: Optional[core.DTSVMState] = None, eval_fn=None,
+                   topology: str = "graph", mesh=None, axis: str = "nodes"):
+    if topology not in ("graph", "ring"):
+        raise ValueError(f"unknown topology {topology!r}; "
+                         f"expected 'graph' or 'ring'")
+    if eval_fn is None:
+        st = dtsvm_dist.run_dtsvm_dist(prob, iters, mesh=mesh, axis=axis,
+                                       topology=topology, qp_iters=qp_iters,
+                                       state=state)
+        return st, None
+    # per-iteration history: one reusable jitted 1-iter runner (compiled
+    # once), evaluating on host between iterations.  The decentralized
+    # deployment would log locally instead.
+    if mesh is None:
+        mesh = dtsvm_dist.make_node_mesh(prob.X.shape[0], axis)
+    run1 = dtsvm_dist.build_runner(mesh, axis=axis, topology=topology,
+                                   qp_iters=qp_iters, iters=1)
+    st = core.init_state(prob) if state is None else state
+    hist = []
+    for _ in range(iters):
+        st = run1(st, prob)
+        hist.append(eval_fn(st))
+    import jax.numpy as jnp
+    return st, jnp.stack(hist)
+
+
+def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",
+        qp_iters: int = 200, state=None, eval_fn=None, **options):
+    """Dispatch one fit through the named backend."""
+    return get(backend)(prob, iters, qp_iters=qp_iters, state=state,
+                        eval_fn=eval_fn, **options)

@@ -1,0 +1,65 @@
+"""Shared evaluation utilities: risk curves and consensus residuals.
+
+Every experiment in the paper evaluates the same way — each (node, task)
+classifier against ONE shared per-task test set — which previously meant
+every example and benchmark hand-rolled the same ``broadcast_to`` dance.
+This module owns that logic once:
+
+    eval_fn = risk_eval_fn(V, data["X_test"], data["y_test"])
+    state, hist = backends.run(prob, iters, eval_fn=eval_fn)   # (iters, V, T)
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dtsvm as core
+
+
+def broadcast_test_set(X_test, y_test, V: int) -> Tuple[jnp.ndarray,
+                                                        jnp.ndarray]:
+    """Tile a per-task test set to every node: (T, n, p) -> (V, T, n, p).
+
+    Accepts a single-task (n, p) set too (a leading task axis is added).
+    """
+    X_test = jnp.asarray(X_test, jnp.float32)
+    y_test = jnp.asarray(y_test, jnp.float32)
+    if X_test.ndim == 2:
+        X_test = X_test[None]
+        y_test = y_test[None]
+    if X_test.ndim != 3:
+        raise ValueError(f"X_test must be (T, n, p) or (n, p); "
+                         f"got shape {X_test.shape}")
+    Xte = jnp.broadcast_to(X_test[None], (V,) + X_test.shape)
+    yte = jnp.broadcast_to(y_test[None], (V,) + y_test.shape)
+    return Xte, yte
+
+
+def risk_eval_fn(V: int, X_test, y_test) -> Callable:
+    """Per-iteration eval hook for ``fit``/``run``: state -> (V, T) risks."""
+    Xte, yte = broadcast_test_set(X_test, y_test, V)
+    return lambda st: core.risks(st.r, Xte, yte)
+
+
+def risks_of_state(state: core.DTSVMState, X_test, y_test) -> jnp.ndarray:
+    """(V, T) per-node risks of a fitted state on the shared test set."""
+    V = state.r.shape[0]
+    Xte, yte = broadcast_test_set(X_test, y_test, V)
+    return core.risks(state.r, Xte, yte)
+
+
+def global_risks(risks_vt) -> np.ndarray:
+    """Network-average (over nodes) risk per task: (V, T) -> (T,)."""
+    return np.asarray(risks_vt).mean(axis=0)
+
+
+def risk_curve(history) -> Optional[np.ndarray]:
+    """Stacked per-iteration eval history as a numpy array (or None)."""
+    return None if history is None else np.asarray(history)
+
+
+def consensus_residuals(state: core.DTSVMState, prob: core.DTSVMProblem):
+    """(task_residual, node_residual) — re-exported from the math layer."""
+    return core.consensus_residuals(state, prob)

@@ -1,0 +1,259 @@
+"""One fit/predict surface over the paper's three solvers.
+
+``SolverConfig`` carries every hyper-parameter of Prop. 1 plus the
+execution choice (backend + options); ``CSVM``, ``DSVM`` and ``DTSVM``
+all implement the same ``Solver`` protocol over it, so swapping the
+algorithm — the thing every figure of the paper does — is a one-line
+change:
+
+    cfg = SolverConfig(C=0.01, eps2=1.0, iters=60)
+    DTSVM(cfg).fit(X, y, mask=mask, adj=adj).risks(X_test, y_test)
+    DSVM(cfg).fit(X, y, mask=mask, adj=adj).risks(X_test, y_test)
+    CSVM(cfg).fit(X, y, mask=mask).risks(X_test, y_test)
+
+Data layout is the repo-wide convention: X (V, T, N, p), y/mask (V, T, N)
+in {-1,+1}/{0,1}, test sets (T, n, p) shared across nodes.  The solvers
+wrap — never replace — the math in ``repro.core``; everything here is
+plumbing, bookkeeping and defaults.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api import backends, evaluate
+from repro.core import csvm as csvm_lib
+from repro.core import dsvm as dsvm_lib
+from repro.core import dtsvm as core
+
+
+@dataclass(frozen=True)
+class SolverConfig:
+    """Hyper-parameters + execution strategy for every solver.
+
+    The algorithmic fields mirror the paper's Section-IV defaults; the
+    execution fields select how ``fit`` runs, not what it computes.
+    """
+    C: float = 0.01
+    eps1: float = 1.0
+    eps2: float = 1.0
+    eta1: float = 1.0
+    eta2: float = 1.0
+    iters: int = 60                  # ADMM iterations per fit()
+    qp_iters: int = 200              # inner box-QP iterations
+    box_scale: Optional[float] = None   # paper's V*T multiplier (auto)
+    backend: str = "vmap"            # "vmap" | "shard_map"
+    backend_options: Dict[str, Any] = field(default_factory=dict)
+    # e.g. {"topology": "ring"} or {"mesh": ..., "axis": "nodes"}
+
+    def replace(self, **kw) -> "SolverConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@runtime_checkable
+class Solver(Protocol):
+    """What every solver exposes; see module docstring for the data layout."""
+
+    config: SolverConfig
+
+    def init_state(self, prob): ...
+    def step(self, state, prob): ...
+    def fit(self, X, y, mask=None, adj=None, **kw) -> "Solver": ...
+    def predict(self, X): ...
+    def risks(self, X_test, y_test): ...
+    def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+
+
+def _as_solver_config(config, overrides) -> SolverConfig:
+    cfg = config if config is not None else SolverConfig()
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    return cfg
+
+
+class _ConsensusSolver:
+    """Shared machinery for the two decentralized solvers."""
+
+    def __init__(self, config: Optional[SolverConfig] = None, **overrides):
+        self.config = _as_solver_config(config, overrides)
+        self.problem_: Optional[core.DTSVMProblem] = None
+        self.state_: Optional[core.DTSVMState] = None
+        self.history_ = None
+
+    # -- problem construction (the one subclass hook) ----------------------
+    def make_problem(self, X, y, mask=None, adj=None, *, active=None,
+                     couple=None) -> core.DTSVMProblem:
+        raise NotImplementedError
+
+    # -- protocol ----------------------------------------------------------
+    def init_state(self, prob: core.DTSVMProblem) -> core.DTSVMState:
+        return core.init_state(prob)
+
+    def step(self, state: core.DTSVMState,
+             prob: core.DTSVMProblem) -> core.DTSVMState:
+        """One Prop.-1 ADMM iteration (always the vmap reference path)."""
+        return core.dtsvm_step(state, prob, qp_iters=self.config.qp_iters)
+
+    def fit(self, X, y, mask=None, adj=None, *, active=None, couple=None,
+            iters: Optional[int] = None, state: Optional[core.DTSVMState]
+            = None, eval_fn=None, X_test=None, y_test=None):
+        """Run ADMM on (X, y).  Returns self; state/history are stored on
+        ``state_`` / ``history_``.  Passing ``state`` warm-starts (the
+        online setting); ``X_test``/``y_test`` record a per-iteration risk
+        curve without any manual broadcasting."""
+        prob = self.make_problem(X, y, mask, adj, active=active,
+                                 couple=couple)
+        if eval_fn is None and X_test is not None:
+            eval_fn = evaluate.risk_eval_fn(prob.X.shape[0], X_test, y_test)
+        cfg = self.config
+        self.state_, self.history_ = backends.run(
+            prob, iters if iters is not None else cfg.iters,
+            backend=cfg.backend, qp_iters=cfg.qp_iters, state=state,
+            eval_fn=eval_fn, **cfg.backend_options)
+        self.problem_ = prob
+        return self
+
+    # -- inference ---------------------------------------------------------
+    def _require_fit(self) -> core.DTSVMState:
+        if self.state_ is None:
+            raise RuntimeError("call fit() first")
+        return self.state_
+
+    def decision(self, X) -> jnp.ndarray:
+        """Decision values g_vt(x).  X: (T, n, p) shared, or (V, T, n, p)."""
+        st = self._require_fit()
+        X = jnp.asarray(X, jnp.float32)
+        if X.ndim == 3:
+            X = jnp.broadcast_to(X[None], (st.r.shape[0],) + X.shape)
+        return core.decision_values(st.r, X)
+
+    def predict(self, X) -> jnp.ndarray:
+        """Predicted labels in {-1, +1}, shape (V, T, n)."""
+        return jnp.sign(self.decision(X))
+
+    def risks(self, X_test, y_test) -> jnp.ndarray:
+        """(V, T) per-node test risks on the shared test set."""
+        return evaluate.risks_of_state(self._require_fit(), X_test, y_test)
+
+    def global_risks(self, X_test, y_test) -> np.ndarray:
+        """(T,) network-average risks (what the figures plot)."""
+        return evaluate.global_risks(self.risks(X_test, y_test))
+
+    def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(task, node) consensus residuals of the fitted state."""
+        st = self._require_fit()
+        return core.consensus_residuals(st, self.problem_)
+
+
+class DTSVM(_ConsensusSolver):
+    """Prop. 1: decentralized multi-task transfer SVM."""
+
+    def make_problem(self, X, y, mask=None, adj=None, *, active=None,
+                     couple=None) -> core.DTSVMProblem:
+        cfg = self.config
+        return core.make_problem(
+            X, y, mask, adj, C=cfg.C, eps1=cfg.eps1, eps2=cfg.eps2,
+            eta1=cfg.eta1, eta2=cfg.eta2, box_scale=cfg.box_scale,
+            active=active, couple=couple)
+
+
+class DSVM(_ConsensusSolver):
+    """Forero et al. single-task consensus SVM — the paper's baseline [7].
+
+    Per-task independent training; ``couple`` is forced to 0 and the
+    shared term is disabled (see ``repro.core.dsvm``).  ``eps1``/``eta1``
+    from the config are ignored by construction.
+    """
+
+    def make_problem(self, X, y, mask=None, adj=None, *, active=None,
+                     couple=None) -> core.DTSVMProblem:
+        cfg = self.config
+        return dsvm_lib.make_dsvm_problem(
+            X, y, mask, adj, C=cfg.C, eps2=cfg.eps2, eta2=cfg.eta2,
+            active=active)
+
+
+class CSVM:
+    """Centralized pooled SVM per task — the paper's baseline [13].
+
+    Same surface, different math: all nodes' data for a task is pooled
+    and one box-QP solved per task.  ``fit`` accepts the identical
+    (V, T, N, p) layout (plus plain (N, p) single-task data) so swapping
+    CSVM for DTSVM in an experiment is still a one-line change.
+    """
+
+    def __init__(self, config: Optional[SolverConfig] = None, *,
+                 C_scale: float = 1.0, **overrides):
+        self.config = _as_solver_config(config, overrides)
+        self.C_scale = C_scale
+        self.w_: Optional[jnp.ndarray] = None      # (T, p)
+        self.b_: Optional[jnp.ndarray] = None      # (T,)
+        self.history_ = None
+
+    def init_state(self, prob=None):
+        return (self.w_, self.b_)
+
+    def step(self, state, prob):
+        raise NotImplementedError(
+            "CSVM is a direct (single-shot) solver; use fit()")
+
+    def fit(self, X, y, mask=None, adj=None, **_ignored) -> "CSVM":
+        X = np.asarray(X, np.float32)
+        y = np.asarray(y, np.float32)
+        if X.ndim == 2:                       # single task, pooled already
+            X = X[None, None]
+            y = y[None, None]
+        V, T, N, p = X.shape
+        if mask is None:
+            mask = np.ones((V, T, N), np.float32)
+        mask = np.asarray(mask, np.float32)
+        ws, bs = [], []
+        for t in range(T):
+            w, b = csvm_lib.csvm_fit(
+                jnp.asarray(X[:, t].reshape(-1, p)),
+                jnp.asarray(y[:, t].reshape(-1)),
+                self.config.C * self.C_scale,
+                jnp.asarray(mask[:, t].reshape(-1)),
+                qp_iters=self.config.qp_iters)
+            ws.append(w)
+            bs.append(b)
+        self.w_ = jnp.stack(ws)
+        self.b_ = jnp.stack(bs)
+        return self
+
+    def _require_fit(self):
+        if self.w_ is None:
+            raise RuntimeError("call fit() first")
+
+    def decision(self, X) -> jnp.ndarray:
+        """X: (T, n, p) -> (T, n) decision values."""
+        self._require_fit()
+        X = jnp.asarray(X, jnp.float32)
+        if X.ndim == 2:
+            X = X[None]
+        return jnp.einsum("tnp,tp->tn", X, self.w_) + self.b_[:, None]
+
+    def predict(self, X) -> jnp.ndarray:
+        return jnp.sign(self.decision(X))
+
+    def risks(self, X_test, y_test) -> jnp.ndarray:
+        """(T,) per-task test risks (no node axis: the model is pooled)."""
+        self._require_fit()
+        y_test = jnp.asarray(y_test, jnp.float32)
+        if y_test.ndim == 1:
+            y_test = y_test[None]
+        g = self.decision(X_test)
+        return jnp.mean((jnp.sign(g) != jnp.sign(y_test)).astype(jnp.float32),
+                        axis=-1)
+
+    def global_risks(self, X_test, y_test) -> np.ndarray:
+        return np.asarray(self.risks(X_test, y_test))
+
+    def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """A centralized model is trivially in consensus."""
+        z = jnp.float32(0.0)
+        return z, z

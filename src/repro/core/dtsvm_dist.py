@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import dtsvm
+from repro.dist import compat
 
 
 def make_node_mesh(V: int, axis: str = "nodes") -> Mesh:
@@ -58,17 +59,17 @@ def _shard_step(state, prob, adj_rows, active_global, *, axis: str,
                             nbr_reduce=nbr_reduce, nbr_counts=nbr_counts)
 
 
-def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
-                   mesh: Optional[Mesh] = None, axis: str = "nodes",
-                   topology: str = "graph", qp_iters: int = 200,
-                   state: Optional[dtsvm.DTSVMState] = None):
-    """Decentralized run.  Shards every (V, ...) array over the node axis."""
-    V, T, N, p = prob.X.shape
-    if mesh is None:
-        mesh = make_node_mesh(V, axis)
-    if state is None:
-        state = dtsvm.init_state(prob)
+def build_runner(mesh: Mesh, *, axis: str = "nodes",
+                 topology: str = "graph", qp_iters: int = 200,
+                 iters: int = 1):
+    """A reusable jitted ``run(state, prob) -> state`` executing ``iters``
+    decentralized ADMM iterations on ``mesh``.
 
+    The returned callable has a stable identity, so calling it repeatedly
+    (e.g. once per evaluation point of a risk curve) compiles ONCE and
+    hits jax's jit cache afterwards — unlike re-invoking
+    ``run_dtsvm_dist``, which rebuilds its closures every call.
+    """
     node = P(axis)
     repl = P()
     state_spec = dtsvm.DTSVMState(r=node, alpha=node, beta=node, lam=node)
@@ -80,23 +81,35 @@ def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
                              prob_spec,
                              is_leaf=lambda x: isinstance(x, P) or x is None)
 
-    adj_rows = prob.adj                                        # (V, V)
-    active_global = prob.active                                # (V, T)
-
     @functools.partial(
-        jax.shard_map, mesh=mesh,
+        compat.shard_map, mesh=mesh,
         in_specs=(state_spec, prob_spec, node, repl),
-        out_specs=state_spec,
-        check_vma=False)
+        check_vma=False, out_specs=state_spec)
     def one_iter(st, pr, adj_r, act_g):
         return _shard_step(st, pr, adj_r, act_g, axis=axis,
                            topology=topology, qp_iters=qp_iters)
 
     @jax.jit
-    def run(st, pr, adj_r, act_g):
+    def run(st, pr):
         def body(s, _):
-            return one_iter(s, pr, adj_r, act_g), None
+            # adj rows shard over nodes; the active table stays global
+            return one_iter(s, pr, pr.adj, pr.active), None
         st, _ = jax.lax.scan(body, st, None, length=iters)
         return st
 
-    return run(state, prob, adj_rows, active_global)
+    return run
+
+
+def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
+                   mesh: Optional[Mesh] = None, axis: str = "nodes",
+                   topology: str = "graph", qp_iters: int = 200,
+                   state: Optional[dtsvm.DTSVMState] = None):
+    """Decentralized run.  Shards every (V, ...) array over the node axis."""
+    V = prob.X.shape[0]
+    if mesh is None:
+        mesh = make_node_mesh(V, axis)
+    if state is None:
+        state = dtsvm.init_state(prob)
+    run = build_runner(mesh, axis=axis, topology=topology,
+                       qp_iters=qp_iters, iters=iters)
+    return run(state, prob)

@@ -1,0 +1,1 @@
+"""Distributed execution substrates: the sharding policy."""

@@ -1,0 +1,72 @@
+"""jax version compatibility shims for the distributed substrates.
+
+The codebase targets the current jax API (``jax.shard_map``,
+``jax.set_mesh``, ``jax.sharding.AxisType``); older runtimes (<= 0.4.x)
+spell these ``jax.experimental.shard_map.shard_map(check_rep=...)``,
+mesh-as-context-manager, and have no axis types at all.  Routing every
+call site through this module keeps the rest of the code on the modern
+spelling while still running on whatever jax the container bakes in.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional, Sequence, Set
+
+import jax
+
+
+def make_mesh(shape: Sequence[int], axis_names: Sequence[str]):
+    """jax.make_mesh with explicit Auto axis types when supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(tuple(shape), tuple(axis_names),
+                                 axis_types=(axis_type.Auto,) * len(shape))
+        except TypeError:
+            pass
+    return jax.make_mesh(tuple(shape), tuple(axis_names))
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` ambient for jit tracing.
+
+    Prefers ``jax.set_mesh`` / ``jax.sharding.use_mesh``; on old jax the
+    Mesh object itself is the context manager.
+    """
+    if mesh is None:
+        return contextlib.nullcontext()
+    fn = getattr(jax, "set_mesh", None) or getattr(jax.sharding, "use_mesh",
+                                                   None)
+    if fn is not None:
+        return fn(mesh)
+    return mesh  # Mesh.__enter__/__exit__ (legacy resource env)
+
+
+def shard_map(f=None, *, mesh, in_specs, out_specs,
+              axis_names: Optional[Set[str]] = None, check_vma: bool = False):
+    """``jax.shard_map`` adapter.
+
+    ``axis_names`` selects the axes that are Manual inside ``f`` (the rest
+    stay auto/GSPMD); new jax takes that kwarg directly, old jax expresses
+    it through the complementary ``auto`` frozenset and spells the
+    replication check ``check_rep``.  Usable as a decorator factory when
+    ``f`` is omitted.
+    """
+    if f is None:
+        return lambda g: shard_map(g, mesh=mesh, in_specs=in_specs,
+                                   out_specs=out_specs,
+                                   axis_names=axis_names,
+                                   check_vma=check_vma)
+    top = getattr(jax, "shard_map", None)
+    if top is not None:
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check_vma)
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return top(f, **kw)
+    from jax.experimental.shard_map import shard_map as legacy
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=check_vma)
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return legacy(f, **kw)

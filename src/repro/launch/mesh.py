@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.dist import compat
+
 # TPU v5e hardware constants (per chip) used by the roofline analysis.
 PEAK_FLOPS_BF16 = 197e12          # FLOP/s
 HBM_BW = 819e9                    # bytes/s
@@ -18,8 +20,7 @@ ICI_BW_PER_LINK = 50e9            # bytes/s per link
 
 
 def _mk(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return compat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

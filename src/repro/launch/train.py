@@ -25,6 +25,7 @@ from repro.configs import get_config, get_reduced_config
 from repro.configs.base import InputShape
 from repro.core.consensus import ConsensusConfig
 from repro.data.synthetic import token_batch
+from repro.dist import compat
 from repro.launch import mesh as mesh_lib
 from repro.train import steps as steps_lib
 
@@ -87,7 +88,7 @@ def main(argv=None):
             start = s
             print(f"resumed from step {start}")
 
-    ctx = jax.set_mesh(mesh) if mesh is not None else _nullcontext()
+    ctx = compat.set_mesh(mesh)
     data_key = jax.random.key(args.seed + 1)
     t0 = time.time()
     with ctx:
@@ -108,14 +109,6 @@ def main(argv=None):
         save_step(args.ckpt_dir, args.steps, jax.device_get(state))
     print("done")
     return state
-
-
-class _nullcontext:
-    def __enter__(self):
-        return None
-
-    def __exit__(self, *a):
-        return False
 
 
 if __name__ == "__main__":

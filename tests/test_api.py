@@ -1,0 +1,284 @@
+"""repro.api — the unified solver/backend/session surface.
+
+The API layer wraps (never replaces) repro.core, so every test here is an
+EXACT-equivalence test against the hand-rolled core path it subsumes.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.api import CSVM, DSVM, DTSVM, OnlineSession, Solver, SolverConfig
+from repro.api import backends, evaluate
+from repro.core import csvm as csvm_lib
+from repro.core import dsvm as dsvm_lib
+from repro.core import dtsvm as core
+from repro.core import graph
+from repro.data import synthetic
+
+from helpers import run_with_devices
+
+
+def _make(V=6, T=2, n_tgt=12, n_src=60, seed=0, n_test=200):
+    n = np.zeros((V, T), int)
+    n[:, 0] = synthetic.split_counts(n_tgt, V)
+    if T > 1:
+        n[:, 1] = synthetic.split_counts(n_src, V)
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n, n_test=n_test, relatedness=0.9, seed=seed)
+    A = graph.make_graph("random", V, degree=0.8, seed=0)
+    return data, A
+
+
+def _assert_states_equal(a: core.DTSVMState, b: core.DTSVMState):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# solvers vs the core paths they wrap
+# ---------------------------------------------------------------------------
+def test_dtsvm_solver_matches_core():
+    data, A = _make()
+    cfg = SolverConfig(C=0.01, eps2=1.0, iters=15, qp_iters=50)
+    m = DTSVM(cfg).fit(data["X"], data["y"], mask=data["mask"], adj=A)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A, C=0.01,
+                             eps2=1.0)
+    st, _ = core.run_dtsvm(prob, 15, qp_iters=50)
+    _assert_states_equal(m.state_, st)
+    # risks through the API == manual broadcast + core.risks
+    Xte, yte = evaluate.broadcast_test_set(data["X_test"], data["y_test"], 6)
+    np.testing.assert_array_equal(
+        np.asarray(m.risks(data["X_test"], data["y_test"])),
+        np.asarray(core.risks(st.r, Xte, yte)))
+
+
+def test_dsvm_solver_matches_core_dsvm():
+    data, A = _make()
+    cfg = SolverConfig(C=0.01, iters=15, qp_iters=50)
+    m = DSVM(cfg).fit(data["X"], data["y"], mask=data["mask"], adj=A)
+    prob = dsvm_lib.make_dsvm_problem(data["X"], data["y"], data["mask"], A,
+                                      C=0.01)
+    st, _ = core.run_dtsvm(prob, 15, qp_iters=50)
+    _assert_states_equal(m.state_, st)
+
+
+def test_csvm_solver_matches_csvm_fit():
+    data, _ = _make()
+    cfg = SolverConfig(C=0.01, qp_iters=300)
+    m = CSVM(cfg).fit(data["X"], data["y"], mask=data["mask"])
+    V, T, N, p = data["X"].shape
+    for t in range(T):
+        w, b = csvm_lib.csvm_fit(
+            jnp.asarray(data["X"][:, t].reshape(-1, p)),
+            jnp.asarray(data["y"][:, t].reshape(-1)), 0.01,
+            jnp.asarray(data["mask"][:, t].reshape(-1)), qp_iters=300)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(m.w_[t]))
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(m.b_[t]))
+        r = float(csvm_lib.csvm_risk(w, b, jnp.asarray(data["X_test"][t]),
+                                     jnp.asarray(data["y_test"][t])))
+        assert float(m.risks(data["X_test"], data["y_test"])[t]) == r
+
+
+def test_solvers_satisfy_protocol():
+    for s in (CSVM(), DSVM(), DTSVM()):
+        assert isinstance(s, Solver)
+
+
+def test_predict_shapes_and_signs():
+    data, A = _make()
+    m = DTSVM(iters=10, qp_iters=40).fit(data["X"], data["y"],
+                                         mask=data["mask"], adj=A)
+    g = m.decision(data["X_test"])
+    yhat = m.predict(data["X_test"])
+    assert g.shape == (6, 2, 200)
+    np.testing.assert_array_equal(np.asarray(jnp.sign(g)), np.asarray(yhat))
+
+
+def test_fit_records_risk_curve():
+    data, A = _make()
+    m = DTSVM(iters=8, qp_iters=40).fit(
+        data["X"], data["y"], mask=data["mask"], adj=A,
+        X_test=data["X_test"], y_test=data["y_test"])
+    assert np.asarray(m.history_).shape == (8, 6, 2)
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+# ---------------------------------------------------------------------------
+def test_backend_registry():
+    assert set(backends.names()) >= {"vmap", "shard_map"}
+    with pytest.raises(ValueError, match="unknown backend"):
+        backends.get("nope")
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("topology", ["graph", "ring"])
+def test_shard_map_backend_matches_vmap(topology):
+    """Switching backend="vmap" -> "shard_map" is config-only and
+    numerically equivalent (the acceptance bar for the backend layer)."""
+    out = run_with_devices(f"""
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.api import DTSVM, SolverConfig
+        from repro.core import graph
+        from repro.data import synthetic
+        V, T = 8, 2
+        n = np.full((V, T), 8, int)
+        data = synthetic.make_multitask_data(V=V, T=T, p=10, n_train=n,
+                                             n_test=50, seed=1)
+        A = graph.ring(V) if "{topology}" == "ring" else \\
+            graph.make_graph("random", V, 0.7, seed=0)
+        cfg = SolverConfig(C=0.01, iters=10, qp_iters=50)
+        ref = DTSVM(cfg).fit(data["X"], data["y"], mask=data["mask"], adj=A)
+        dist = DTSVM(cfg.replace(
+            backend="shard_map",
+            backend_options={{"topology": "{topology}"}})).fit(
+                data["X"], data["y"], mask=data["mask"], adj=A)
+        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
+                  zip(jax.tree.leaves(ref.state_),
+                      jax.tree.leaves(dist.state_)))
+        assert err < 1e-5, err
+        ra = np.asarray(ref.risks(data["X_test"], data["y_test"]))
+        rb = np.asarray(dist.risks(data["X_test"], data["y_test"]))
+        np.testing.assert_allclose(ra, rb, atol=1e-6)
+        # risk-curve recording through the distributed backend
+        hist = DTSVM(cfg.replace(
+            iters=3, backend="shard_map",
+            backend_options={{"topology": "{topology}"}})).fit(
+                data["X"], data["y"], mask=data["mask"], adj=A,
+                X_test=data["X_test"], y_test=data["y_test"]).history_
+        assert np.asarray(hist).shape == (3, V, T)
+        print("MATCH", err)
+    """)
+    assert "MATCH" in out
+
+
+# ---------------------------------------------------------------------------
+# OnlineSession vs the hand-rolled per-stage loop (paper Fig. 7)
+# ---------------------------------------------------------------------------
+def _online_fixture(V=6, T=3, seed=0):
+    n = np.zeros((V, T), int)
+    n[:, 0] = 10
+    n[:, 1] = 10
+    n[:, 2] = 40
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n, n_test=300, relatedness=0.9, seed=seed)
+    return data, graph.full(V)
+
+
+def _act(V, T, tasks):
+    a = np.zeros((V, T), np.float32)
+    for t in tasks:
+        a[:, t] = 1.0
+    return a
+
+
+def test_session_replays_online_transfer_bit_for_bit():
+    """The 5-stage online_transfer scenario through OnlineSession must
+    equal the seed's hand-rolled make_problem-per-stage loop EXACTLY."""
+    V, T = 6, 3
+    data, A = _online_fixture(V, T)
+    ones = np.ones((V,), np.float32)
+    zeros = np.zeros((V,), np.float32)
+    stages = [
+        (_act(V, T, [0, 1, 2]), zeros),
+        (_act(V, T, [0, 2]), ones),
+        (_act(V, T, [1, 2]), zeros),
+        (_act(V, T, [1, 2]), ones),
+        (_act(V, T, [2]), zeros),
+    ]
+
+    # hand-rolled reference (exactly examples/online_transfer.py pre-API)
+    state = None
+    for active, couple in stages:
+        prob = core.make_problem(data["X"], data["y"], data["mask"], A,
+                                 C=0.01, eps1=1.0, eps2=100.0,
+                                 active=active, couple=couple)
+        if state is None:
+            state = core.init_state(prob)
+        state, _ = core.run_dtsvm(prob, 10, qp_iters=50, state=state)
+
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                         config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0,
+                                             qp_iters=50))
+    for active, couple in stages:
+        sess.set_active(active).set_coupling(couple)
+        sess.run(10)
+    _assert_states_equal(sess.state, state)
+    assert sess.iteration == 50
+
+
+def test_session_membership_events():
+    V, T = 6, 3
+    data, A = _online_fixture(V, T)
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                         active=_act(V, T, [2]), couple=False * np.ones(V))
+    sess.add_task(0)
+    np.testing.assert_array_equal(sess.active, _act(V, T, [0, 2]))
+    sess.add_task(1, nodes=[0, 1])
+    assert sess.active[0, 1] == 1.0 and sess.active[5, 1] == 0.0
+    sess.drop_task(0)
+    np.testing.assert_array_equal(sess.active[:, 0], np.zeros(V))
+    sess.set_coupling(True, nodes=[2])
+    assert sess.couple[2] == 1.0 and sess.couple[0] == 0.0
+    sess.set_coupling(False)
+    np.testing.assert_array_equal(sess.couple, np.zeros(V))
+
+
+def test_session_dropped_task_state_freezes():
+    """A task that leaves keeps its classifier; re-entering resumes it."""
+    V, T = 6, 3
+    data, A = _online_fixture(V, T)
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                         config=SolverConfig(qp_iters=40))
+    sess.run(5)
+    r_before = np.asarray(sess.state.r[:, 0])
+    assert np.abs(r_before).max() > 0
+    sess.drop_task(0)
+    sess.run(5)
+    np.testing.assert_array_equal(np.asarray(sess.state.r[:, 0]), r_before)
+
+
+def test_session_records_history_blocks():
+    V, T = 6, 3
+    data, A = _online_fixture(V, T)
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                         config=SolverConfig(qp_iters=40),
+                         X_test=data["X_test"], y_test=data["y_test"])
+    h1 = sess.run(4)
+    h2 = sess.run(3)
+    assert h1.shape == (4, V, T) and h2.shape == (3, V, T)
+    assert len(sess.history) == 2
+    assert sess.global_risks().shape == (T,)
+
+
+def test_session_jit_path_close_to_eager():
+    """jit=True is the fast path: numerically equivalent (not bitwise)."""
+    V, T = 6, 3
+    data, A = _online_fixture(V, T)
+    kw = dict(mask=data["mask"], adj=A,
+              config=SolverConfig(qp_iters=40, eps2=100.0))
+    a = OnlineSession(data["X"], data["y"], **kw)
+    b = OnlineSession(data["X"], data["y"], jit=True, **kw)
+    for s in (a, b):
+        s.run(6)
+        s.drop_task(0)
+        s.set_coupling(False)
+        s.run(6)
+    for la, lb in zip(jax.tree.leaves(a.state), jax.tree.leaves(b.state)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   atol=1e-4, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# evaluate helpers
+# ---------------------------------------------------------------------------
+def test_broadcast_test_set_shapes():
+    X = np.zeros((3, 7, 4), np.float32)
+    y = np.ones((3, 7), np.float32)
+    Xte, yte = evaluate.broadcast_test_set(X, y, V=5)
+    assert Xte.shape == (5, 3, 7, 4) and yte.shape == (5, 3, 7)
+    X1, y1 = evaluate.broadcast_test_set(X[0], y[0], V=5)
+    assert X1.shape == (5, 1, 7, 4)
+    with pytest.raises(ValueError):
+        evaluate.broadcast_test_set(np.zeros((2, 2, 2, 2)), y, V=5)

@@ -5,6 +5,7 @@ from helpers import run_with_devices
 
 
 @pytest.mark.parametrize("topology", ["graph", "ring"])
+@pytest.mark.slow
 def test_dtsvm_dist_matches_reference(topology):
     out = run_with_devices(f"""
         import numpy as np, jax, jax.numpy as jnp
@@ -28,6 +29,12 @@ def test_dtsvm_dist_matches_reference(topology):
     assert "MATCH" in out
 
 
+@pytest.mark.slow
+@pytest.mark.xfail(
+    tuple(map(int, __import__("jax").__version__.split(".")[:2])) < (0, 5),
+    reason="partial-auto shard_map (manual data axis + auto model axis) "
+           "trips an XLA SPMD partitioner check on jax 0.4.x",
+    strict=False)
 def test_consensus_trainer_agrees_and_learns():
     """ADMM-consensus training on a ring: loss decreases AND replicas
     converge toward consensus (gap shrinks) — the deep-net lift of the
@@ -37,6 +44,7 @@ def test_consensus_trainer_agrees_and_learns():
         from repro.configs import get_reduced_config
         from repro.configs.base import InputShape
         from repro.core.consensus import ConsensusConfig
+        from repro.dist import compat
         from repro.launch import mesh as mesh_lib
         from repro.train import steps as steps_lib
         from repro.data.synthetic import token_batch
@@ -55,7 +63,7 @@ def test_consensus_trainer_agrees_and_learns():
         step = steps_lib.make_consensus_train_step(
             cfg, mesh, ConsensusConfig(eta=0.1, every=1), lr=3e-3)
         batch = token_batch(jax.random.key(2), cfg.vocab_size, 8, 64)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             losses, gaps = [], []
             for i in range(10):
                 state, m = step(state, batch)
@@ -68,12 +76,14 @@ def test_consensus_trainer_agrees_and_learns():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_consensus_every_k_skips_exchange():
     out = run_with_devices("""
         import jax, jax.numpy as jnp
         from repro.configs import get_reduced_config
         from repro.configs.base import InputShape
         from repro.core.consensus import ConsensusConfig
+        from repro.dist import compat
         from repro.launch import mesh as mesh_lib
         from repro.train import steps as steps_lib
         from repro.data.synthetic import token_batch
@@ -86,7 +96,7 @@ def test_consensus_every_k_skips_exchange():
         step = steps_lib.make_consensus_train_step(
             cfg, mesh, ConsensusConfig(eta=0.1, every=4), lr=1e-3)
         batch = token_batch(jax.random.key(2), cfg.vocab_size, 4, 32)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             for i in range(3):
                 state, m = step(state, batch)
         assert int(state.step) == 3
@@ -95,6 +105,7 @@ def test_consensus_every_k_skips_exchange():
     assert "OK" in out
 
 
+@pytest.mark.slow
 def test_allreduce_train_step_sharded():
     """Standard trainer under a debug mesh: one sharded step runs and the
     replicated loss is finite."""
@@ -102,6 +113,7 @@ def test_allreduce_train_step_sharded():
         import jax, jax.numpy as jnp
         from repro.configs import get_reduced_config
         from repro.configs.base import InputShape
+        from repro.dist import compat
         from repro.dist import sharding as shp
         from repro.launch import mesh as mesh_lib
         from repro.train import steps as steps_lib
@@ -111,7 +123,7 @@ def test_allreduce_train_step_sharded():
         mesh = mesh_lib.make_debug_mesh(data=2, model=2)
         shape = InputShape("t", 64, 4, "train")
         rng = jax.random.key(0)
-        with jax.set_mesh(mesh):
+        with compat.set_mesh(mesh):
             state = steps_lib.make_train_state(cfg, rng, shape)
             spec = shp.param_specs(
                 jax.eval_shape(lambda: state), mesh, shp.ctx_for(cfg))

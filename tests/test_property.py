@@ -2,7 +2,11 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="optional test dep (pip install -e .[test])")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import graph, qp as qp_lib
 from repro.kernels import ref
