@@ -1,0 +1,162 @@
+"""Planned vs unplanned fit(): measures the invariant-hoisting win.
+
+Times a full DTSVM fit two ways over identical inputs, in two regimes —
+``paper`` (V=30, T=4, N=256 per (v,t), p=10, 60 ADMM iterations: the
+ISSUE config, where the Gram build is a few % of iteration cost and the
+planned/unplanned gap sits inside CPU noise) and ``wide_p64`` (same
+shapes at p=64, where the N²p Hessian build is a large fraction and the
+hoist is directly measurable):
+
+- ``unplanned`` — the seed's per-iteration path: ``dtsvm_step``, which
+  rebuilds Z, K, U, the counts and the box every iteration;
+- ``planned``   — ``repro.engine.compile_problem`` + ``plan.run``: the
+  invariants once, then the light state-dependent body.
+
+Both in two execution modes: ``scan`` (one fused lax.scan per fit —
+XLA's loop-invariant code motion already hoists much of the rebuild
+there, so the delta is modest) and ``stepwise`` (one eager call per
+iteration — the session / direct-``dtsvm_step``-caller pattern, where
+no compiler can hoist across calls and the plan's reuse is structural).
+
+Outputs are verified bit-for-bit identical before timing is reported.
+The full (non ``--fast``) run writes ``BENCH_fit.json`` at the repo
+root (the perf-trajectory seed); both modes emit the ``run.py`` CSV
+contract on stdout.
+"""
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from common import emit
+
+from repro import engine
+from repro.core import dtsvm as core
+from repro.core import graph
+from repro.data import synthetic
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _legacy_run(prob, iters, qp_iters, state):
+    def body(st, _):
+        return core.dtsvm_step(st, prob, qp_iters), jnp.float32(0)
+    st, _ = jax.lax.scan(body, state, None, length=iters)
+    return st
+
+
+def _bench_one(V, T, n_per_vt, p, iters, qp_iters):
+    n_train = np.full((V, T), n_per_vt, int)
+    data = synthetic.make_multitask_data(V=V, T=T, p=p, n_train=n_train,
+                                         n_test=64, seed=0)
+    A = graph.make_graph("random", V, degree=0.5, seed=0)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A, C=0.01)
+    state0 = core.init_state(prob)
+    jax.block_until_ready(prob.X)
+
+    def planned():
+        # a fit() compiles the plan too — charge it to the planned time
+        pl = engine.compile_problem(prob, qp_iters=qp_iters)
+        st, _ = pl.run(state=state0, iters=iters)
+        return st
+
+    # stepwise mode: one eager dispatch per iteration (no scan to hoist
+    # invariants out of) — the online-session / direct-caller pattern
+    def stepwise_legacy():
+        st = state0
+        for _ in range(iters):
+            st = core.dtsvm_step(st, prob, qp_iters)
+        return st
+
+    def stepwise_planned():
+        pl = engine.compile_problem(prob, qp_iters=qp_iters)
+        st = state0
+        for _ in range(iters):
+            st = pl.step(st)
+        return st
+
+    variants = {
+        "scan_legacy": lambda: _legacy_run(prob, iters, qp_iters, state0),
+        "scan_planned": planned,
+        "step_legacy": stepwise_legacy,
+        "step_planned": stepwise_planned,
+        # the hoisted quantity itself: what one invariant build (Z, K,
+        # u, counts, box, L) costs — the legacy path pays this EVERY
+        # iteration, the plan once per fit
+        "invariants": lambda: jax.tree.map(
+            jnp.asarray, engine.compute_invariants(prob)),
+    }
+    # interleave the variants round-robin so slow machine-load drift
+    # hits all of them equally; keep per-variant min over repeats
+    last, best = {}, {k: float("inf") for k in variants}
+    for k, fn in variants.items():                # warm-up (compile)
+        last[k] = jax.block_until_ready(fn())
+    for _ in range(3):
+        for k, fn in variants.items():
+            t0 = time.time()
+            last[k] = jax.block_until_ready(fn())
+            best[k] = min(best[k], time.time() - t0)
+
+    for a, b in zip(jax.tree.leaves(last["scan_legacy"]),
+                    jax.tree.leaves(last["scan_planned"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    dt_legacy, dt_plan = best["scan_legacy"], best["scan_planned"]
+    dt_step_legacy, dt_step_plan = best["step_legacy"], best["step_planned"]
+    dt_inv = best["invariants"]
+
+    rec = {
+        "config": {"V": V, "T": T, "N": int(prob.X.shape[2]),
+                   "p": int(prob.X.shape[3]), "iters": iters,
+                   "qp_iters": qp_iters, "backend": jax.default_backend()},
+        "scan": {
+            "unplanned_ms_per_iter": 1e3 * dt_legacy / iters,
+            "planned_ms_per_iter": 1e3 * dt_plan / iters,
+            "speedup": dt_legacy / dt_plan,
+        },
+        "stepwise": {
+            "unplanned_ms_per_iter": 1e3 * dt_step_legacy / iters,
+            "planned_ms_per_iter": 1e3 * dt_step_plan / iters,
+            "speedup": dt_step_legacy / dt_step_plan,
+        },
+        # per-fit invariant work: legacy pays iters×, the plan pays 1×
+        "invariant_build_ms": 1e3 * dt_inv,
+        "invariant_ms_saved_per_fit": 1e3 * dt_inv * (iters - 1),
+        "bitwise_identical": True,
+    }
+    return rec
+
+
+def run(fast: bool = False):
+    if fast:
+        return {"paper": _bench_one(8, 2, 32, 10, 10, 50)}
+    recs = {
+        "paper": _bench_one(30, 4, 256, 10, 60, 100),
+        "wide_p64": _bench_one(30, 4, 256, 64, 60, 100),
+    }
+    # fast mode is a smoke run on a toy config — never clobber the
+    # committed paper-regime perf-trajectory record with it
+    with open(os.path.join(ROOT, "BENCH_fit.json"), "w") as f:
+        json.dump(recs, f, indent=2)
+        f.write("\n")
+    return recs
+
+
+def main(fast=False):
+    recs = run(fast)
+    for name, rec in recs.items():
+        emit(f"bench_fit_{name}",
+             1e3 * rec["scan"]["planned_ms_per_iter"],
+             f"scan_speedup={rec['scan']['speedup']:.2f}x "
+             f"stepwise_speedup={rec['stepwise']['speedup']:.2f}x "
+             f"planned_ms_it={rec['scan']['planned_ms_per_iter']:.1f}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    main(ap.parse_args().fast)

@@ -21,6 +21,7 @@ def main() -> None:
     args = ap.parse_args()
     fast = not args.full
 
+    import bench_fit
     import fig2_convergence
     import fig3_eps_sweep
     import fig4_c_sweep
@@ -37,6 +38,7 @@ def main() -> None:
         "fig5": fig5_unbalanced.main,
         "fig6": fig6_mixed.main,
         "fig7": fig7_online.main,
+        "fit": bench_fit.main,
         "kernels": kernels_bench.main,
         "roofline": lambda fast: roofline.main([]),
     }

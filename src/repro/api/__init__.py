@@ -4,8 +4,13 @@
 
 - ``solvers``: one fit/predict protocol over CSVM / DSVM / DTSVM
 - ``backends``: execution-strategy registry ("vmap", "shard_map")
-- ``session``: OnlineSession for online task enter/leave (Fig. 7)
+- ``session``: OnlineSession for online task enter/leave (Fig. 7),
+  incrementally re-planned via ``repro.engine``
 - ``evaluate``: shared risk-curve / residual evaluation
+
+Execution compiles through the plan/execute layer (``repro.engine``):
+loop-invariants once per fit, pluggable QP engines
+(``SolverConfig(qp_solver="fista" | "pg" | "pallas_fused")``).
 
 The math stays in ``repro.core`` (and keeps working unchanged); this
 package owns problem construction, execution dispatch and evaluation

@@ -2,19 +2,26 @@
 
 A backend is a callable
 
-    run(prob, iters, *, qp_iters, state, eval_fn, **options)
+    run(prob, iters, *, qp_iters, qp_solver, state, eval_fn, **options)
         -> (DTSVMState, history | None)
 
 over the SAME ``DTSVMProblem``; switching backends changes how the
-Prop.-1 iteration executes, never what it computes:
+Prop.-1 iteration executes, never what it computes.  Every backend goes
+through the plan/execute engine (``repro.engine``): loop-invariants are
+compiled once per fit, then the light per-iteration body runs.
 
-- ``"vmap"``       single-host, dense-adjacency einsum neighbor sums
-                   (``repro.core.dtsvm.run_dtsvm``) — the default.
+- ``"vmap"``       single-host, dense-adjacency einsum neighbor sums —
+                   the default.  Accepts a prebuilt ``plan=`` (the
+                   online Session passes its incrementally re-planned
+                   one) and builds one otherwise.
 - ``"shard_map"``  one device per network node, neighbor sums as
-                   collectives (``repro.core.dtsvm_dist``); accepts
+                   collectives (``repro.core.dtsvm_dist``), the plan
+                   compiled per node inside the shard; accepts
                    ``topology="graph" | "ring"`` and an optional ``mesh``.
 
 Both are numerically equivalent (tested); pick by config, not by import.
+``qp_solver`` selects the inner dual engine ("fista" | "pg" |
+"pallas_fused" — ``repro.engine.qp_engines``).
 """
 from __future__ import annotations
 
@@ -22,6 +29,7 @@ from typing import Callable, Dict, Optional
 
 from repro.core import dtsvm as core
 from repro.core import dtsvm_dist
+from repro.engine import plan as engine_plan
 
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -49,14 +57,23 @@ def names():
 
 @register("vmap")
 def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
+              qp_solver: str = "fista",
               state: Optional[core.DTSVMState] = None, eval_fn=None,
-              **_ignored):
-    return core.run_dtsvm(prob, iters, qp_iters, state=state, eval_fn=eval_fn)
+              plan: Optional[engine_plan.Plan] = None, **_ignored):
+    if plan is None:
+        plan = engine_plan.compile_problem(prob, qp_iters=qp_iters,
+                                           qp_solver=qp_solver)
+    elif (plan.prob is not prob or plan.qp_iters != qp_iters
+          or plan.qp_solver != qp_solver):
+        raise ValueError(
+            "prebuilt plan= disagrees with the call: pass prob=plan.prob "
+            "and matching qp_iters/qp_solver (or omit plan=)")
+    return plan.run(state=state, iters=iters, eval_fn=eval_fn)
 
 
 @register("shard_map")
 def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
-                   qp_iters: int = 200,
+                   qp_iters: int = 200, qp_solver: str = "fista",
                    state: Optional[core.DTSVMState] = None, eval_fn=None,
                    topology: str = "graph", mesh=None, axis: str = "nodes"):
     if topology not in ("graph", "ring"):
@@ -65,26 +82,29 @@ def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
     if eval_fn is None:
         st = dtsvm_dist.run_dtsvm_dist(prob, iters, mesh=mesh, axis=axis,
                                        topology=topology, qp_iters=qp_iters,
-                                       state=state)
+                                       state=state, qp_solver=qp_solver)
         return st, None
-    # per-iteration history: one reusable jitted 1-iter runner (compiled
-    # once), evaluating on host between iterations.  The decentralized
-    # deployment would log locally instead.
+    # per-iteration history: compile the node-sharded plan invariants
+    # ONCE, then step against them between host evaluations.  The
+    # decentralized deployment would log locally instead.
     if mesh is None:
         mesh = dtsvm_dist.make_node_mesh(prob.X.shape[0], axis)
-    run1 = dtsvm_dist.build_runner(mesh, axis=axis, topology=topology,
-                                   qp_iters=qp_iters, iters=1)
+    compile_fn, run1 = dtsvm_dist.build_planned_runner(
+        mesh, axis=axis, topology=topology, qp_iters=qp_iters, iters=1,
+        qp_solver=qp_solver)
+    inv = compile_fn(prob)
     st = core.init_state(prob) if state is None else state
     hist = []
     for _ in range(iters):
-        st = run1(st, prob)
+        st = run1(st, prob, inv)
         hist.append(eval_fn(st))
     import jax.numpy as jnp
     return st, jnp.stack(hist)
 
 
 def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",
-        qp_iters: int = 200, state=None, eval_fn=None, **options):
+        qp_iters: int = 200, qp_solver: str = "fista", state=None,
+        eval_fn=None, **options):
     """Dispatch one fit through the named backend."""
-    return get(backend)(prob, iters, qp_iters=qp_iters, state=state,
-                        eval_fn=eval_fn, **options)
+    return get(backend)(prob, iters, qp_iters=qp_iters, qp_solver=qp_solver,
+                        state=state, eval_fn=eval_fn, **options)

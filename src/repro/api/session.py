@@ -18,6 +18,15 @@ Membership masks are DATA, not problem structure: every stage sees a
 ADMM scan is reused across stages (jax's compilation cache keys on the
 computation, which never changes) instead of re-lowering per stage.
 
+The session plans incrementally (``repro.engine``): the first ``run``
+compiles the problem's loop-invariants into a ``Plan``; afterwards each
+membership event only invalidates the invariants it touches — counts,
+U/a diagonals, the QP box, and the K Gram slices of the (v,t) pairs
+whose ``a`` row actually changed — while every untouched Gram block
+carries over bit-for-bit (``plan_stats`` counts the reuse).  This is
+the enter/leave story of Fig. 7 without ever rebuilding the problem
+from scratch.
+
 Replaying a stage schedule through a session is bit-for-bit identical to
 the hand-rolled per-stage ``make_problem`` + ``run_dtsvm`` loop it
 replaces (tested).  ``jit=True`` additionally wraps each ``run`` in one
@@ -36,13 +45,16 @@ import numpy as np
 from repro.api import backends, evaluate
 from repro.api.solvers import SolverConfig, _as_solver_config
 from repro.core import dtsvm as core
+from repro.engine import plan as engine_plan
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "qp_iters",
-                                             "with_eval"))
-def _run_jitted(prob, state, Xte, yte, iters, qp_iters, with_eval):
+                                             "with_eval", "qp_solver"))
+def _run_jitted(prob, state, Xte, yte, iters, qp_iters, with_eval,
+                qp_solver="fista"):
     ev = (lambda st: core.risks(st.r, Xte, yte)) if with_eval else None
-    return core.run_dtsvm(prob, iters, qp_iters, state=state, eval_fn=ev)
+    return core.run_dtsvm(prob, iters, qp_iters, state=state, eval_fn=ev,
+                          qp_solver=qp_solver)
 
 
 def _node_index(nodes, V: int):
@@ -76,6 +88,8 @@ class OnlineSession:
         self.state: Optional[core.DTSVMState] = None
         self.iteration = 0
         self.history = []            # one (iters, V, T) risk block per run()
+        self._plan: Optional[engine_plan.Plan] = None
+        self._masks_dirty = False    # membership changed since last plan
 
     # ------------------------------------------------------------------
     # membership events
@@ -94,6 +108,7 @@ class OnlineSession:
                  ) -> "OnlineSession":
         """Activate ``task`` at ``nodes`` (default: everywhere)."""
         self._active[_node_index(nodes, self.V), task] = 1.0
+        self._masks_dirty = True
         return self
 
     def drop_task(self, task: int, nodes: Optional[Sequence[int]] = None
@@ -101,11 +116,13 @@ class OnlineSession:
         """Deactivate ``task``; its per-node state freezes but persists,
         so the task re-enters later exactly where it left off."""
         self._active[_node_index(nodes, self.V), task] = 0.0
+        self._masks_dirty = True
         return self
 
     def set_active(self, active) -> "OnlineSession":
         self._active = np.array(active, np.float32, copy=True).reshape(
             self.V, self.T)
+        self._masks_dirty = True
         return self
 
     def set_coupling(self, on: Union[bool, float, np.ndarray],
@@ -120,6 +137,7 @@ class OnlineSession:
                     "pass either a full (V,) couple mask OR a scalar with "
                     "nodes=, not both")
             self._couple = np.array(on, np.float32, copy=True).reshape(self.V)
+        self._masks_dirty = True
         return self
 
     # ------------------------------------------------------------------
@@ -139,20 +157,40 @@ class OnlineSession:
             box_scale=cfg.box_scale, active=self._active.copy(),
             couple=self._couple.copy())
 
+    def _current_plan(self) -> engine_plan.Plan:
+        """The stage's Plan: compiled once, then incrementally re-planned
+        — a membership event recomputes only the invariants it touched
+        (the untouched Gram slices are reused bit-for-bit)."""
+        if self._plan is None:
+            self._plan = engine_plan.compile_problem(
+                self.problem(), self.config)
+        elif self._masks_dirty:
+            self._plan = self._plan.replan(active=self._active.copy(),
+                                           couple=self._couple.copy())
+        self._masks_dirty = False
+        return self._plan
+
+    @property
+    def plan_stats(self) -> dict:
+        """Invariant-reuse counters of the incremental planner (empty
+        before the first ``run``)."""
+        return {} if self._plan is None else dict(self._plan.stats)
+
     def run(self, iters: Optional[int] = None, *, record: bool = True):
         """Advance the live network ``iters`` ADMM iterations under the
         CURRENT membership masks.  Returns the (iters, V, T) risk curve
         when a test set was given (and ``record``), else None."""
         cfg = self.config
         iters = iters if iters is not None else cfg.iters
-        prob = self.problem()
-        if self.state is None:
-            self.state = core.init_state(prob)
         with_eval = record and self._test is not None
         if self._jit and cfg.backend == "vmap":
             Xte, yte = self._test if with_eval else (None, None)
+            prob = self.problem()
+            if self.state is None:
+                self.state = core.init_state(prob)
             self.state, hist = _run_jitted(prob, self.state, Xte, yte,
-                                           iters, cfg.qp_iters, with_eval)
+                                           iters, cfg.qp_iters, with_eval,
+                                           cfg.qp_solver)
             if not with_eval:
                 hist = None
         else:
@@ -160,9 +198,15 @@ class OnlineSession:
             if with_eval:
                 Xte, yte = self._test
                 ev = lambda st: core.risks(st.r, Xte, yte)  # noqa: E731
+            plan = (self._current_plan() if cfg.backend == "vmap" else None)
+            prob = plan.prob if plan is not None else self.problem()
+            if self.state is None:
+                self.state = core.init_state(prob)
+            plan_kw = {} if plan is None else {"plan": plan}
             self.state, hist = backends.run(
                 prob, iters, backend=cfg.backend, qp_iters=cfg.qp_iters,
-                state=self.state, eval_fn=ev, **cfg.backend_options)
+                qp_solver=cfg.qp_solver, state=self.state, eval_fn=ev,
+                **plan_kw, **cfg.backend_options)
         self.iteration += iters
         if hist is not None:
             self.history.append(np.asarray(hist))

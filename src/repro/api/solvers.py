@@ -45,6 +45,7 @@ class SolverConfig:
     eta2: float = 1.0
     iters: int = 60                  # ADMM iterations per fit()
     qp_iters: int = 200              # inner box-QP iterations
+    qp_solver: str = "fista"         # "fista" | "pg" | "pallas_fused"
     box_scale: Optional[float] = None   # paper's V*T multiplier (auto)
     backend: str = "vmap"            # "vmap" | "shard_map"
     backend_options: Dict[str, Any] = field(default_factory=dict)
@@ -95,8 +96,12 @@ class _ConsensusSolver:
 
     def step(self, state: core.DTSVMState,
              prob: core.DTSVMProblem) -> core.DTSVMState:
-        """One Prop.-1 ADMM iteration (always the vmap reference path)."""
-        return core.dtsvm_step(state, prob, qp_iters=self.config.qp_iters)
+        """One Prop.-1 ADMM iteration (vmap path), honoring the
+        configured QP engine.  One-shot: compiles the problem's
+        invariants per call — loops should hold a plan instead
+        (``repro.engine.compile_problem`` + ``plan.step``)."""
+        from repro import engine
+        return engine.compile_problem(prob, self.config).step(state)
 
     def fit(self, X, y, mask=None, adj=None, *, active=None, couple=None,
             iters: Optional[int] = None, state: Optional[core.DTSVMState]
@@ -112,7 +117,8 @@ class _ConsensusSolver:
         cfg = self.config
         self.state_, self.history_ = backends.run(
             prob, iters if iters is not None else cfg.iters,
-            backend=cfg.backend, qp_iters=cfg.qp_iters, state=state,
+            backend=cfg.backend, qp_iters=cfg.qp_iters,
+            qp_solver=cfg.qp_solver, state=state,
             eval_fn=eval_fn, **cfg.backend_options)
         self.problem_ = prob
         return self
@@ -211,18 +217,14 @@ class CSVM:
         if mask is None:
             mask = np.ones((V, T, N), np.float32)
         mask = np.asarray(mask, np.float32)
-        ws, bs = [], []
-        for t in range(T):
-            w, b = csvm_lib.csvm_fit(
-                jnp.asarray(X[:, t].reshape(-1, p)),
-                jnp.asarray(y[:, t].reshape(-1)),
-                self.config.C * self.C_scale,
-                jnp.asarray(mask[:, t].reshape(-1)),
-                qp_iters=self.config.qp_iters)
-            ws.append(w)
-            bs.append(b)
-        self.w_ = jnp.stack(ws)
-        self.b_ = jnp.stack(bs)
+        # pool nodes per task, then one vmapped solve over all T tasks
+        # (bit-for-bit the per-task loop it replaces — tested)
+        self.w_, self.b_ = csvm_lib.csvm_fit_tasks(
+            jnp.asarray(X.transpose(1, 0, 2, 3).reshape(T, V * N, p)),
+            jnp.asarray(y.transpose(1, 0, 2).reshape(T, V * N)),
+            self.config.C * self.C_scale,
+            jnp.asarray(mask.transpose(1, 0, 2).reshape(T, V * N)),
+            qp_iters=self.config.qp_iters)
         return self
 
     def _require_fit(self):

@@ -18,6 +18,14 @@ so the dual Hessian of QP (6) is the *weighted Gram matrix*
 
 — the compute hot spot, served by ``repro.kernels.gram`` on TPU.
 
+K (with Z, U, the counts, the QP box and its Lipschitz bound) depends
+only on the problem, never on the ADMM state, so ``run_dtsvm`` executes
+through ``repro.engine``: invariants are compiled once per fit and only
+the state-dependent body runs per iteration.  ``dtsvm_step`` below is
+the self-contained single-iteration reference (recomputes everything
+each call) — kept as the correctness oracle the engine is tested
+against bit-for-bit, and for one-off step-debugging.
+
 Generalizations needed by the paper's own experiments (all default to the
 plain algorithm):
 
@@ -128,7 +136,6 @@ def _counts(prob: DTSVMProblem, nbr_counts: Optional[jnp.ndarray] = None):
 def _u_diag(prob: DTSVMProblem, ntp, nbr):
     """Diagonal of U_vt, eq. (10): (V, T, 2p+2)."""
     p = prob.X.shape[-1]
-    e1, e2 = prob.eps1, prob.eta1
     w0 = prob.eps1 + 2 * prob.eta1 * ntp[..., None] + 2 * prob.eta2 * nbr[..., None]
     b0 = 2 * prob.eta1 * ntp[..., None] + 2 * prob.eta2 * nbr[..., None]
     wt = prob.eps2 + 2 * prob.eta2 * nbr[..., None]
@@ -179,11 +186,17 @@ def _qp_inputs(prob: DTSVMProblem, u, f):
 def dtsvm_step(state: DTSVMState, prob: DTSVMProblem,
                qp_iters: int = 200, nbr_reduce=None,
                nbr_counts: Optional[jnp.ndarray] = None) -> DTSVMState:
-    """One full Proposition-1 iteration (eqs. 6-9).
+    """One full Proposition-1 iteration (eqs. 6-9), self-contained.
 
     ``nbr_reduce`` abstracts the neighbor sum so the same math runs both
     vmapped on one host (dense-adjacency einsum, the default) and SPMD
     inside shard_map (all_gather/ppermute — repro.core.dtsvm_dist).
+
+    This is the LEGACY per-iteration path: it rebuilds every loop
+    invariant (Z, K, u, counts, box) on each call.  Multi-iteration runs
+    should go through ``run_dtsvm`` / ``repro.engine.compile_problem``,
+    which hoist those invariants out of the loop and produce bit-for-bit
+    identical states (migration note: API.md §engine).
     """
     p = prob.X.shape[-1]
     if nbr_reduce is None:
@@ -220,19 +233,23 @@ def dtsvm_step(state: DTSVMState, prob: DTSVMProblem,
 
 def run_dtsvm(prob: DTSVMProblem, iters: int, qp_iters: int = 200,
               state: Optional[DTSVMState] = None,
-              eval_fn: Optional[Callable[[DTSVMState], jnp.ndarray]] = None):
+              eval_fn: Optional[Callable[[DTSVMState], jnp.ndarray]] = None,
+              qp_solver: str = "fista"):
     """Run ADMM iterations.  Returns (state, history) where history stacks
-    ``eval_fn(state)`` after every iteration (or None)."""
-    if state is None:
-        state = init_state(prob)
+    ``eval_fn(state)`` after every iteration (or None).
 
-    def body(state, _):
-        state = dtsvm_step(state, prob, qp_iters)
-        out = eval_fn(state) if eval_fn is not None else jnp.float32(0)
-        return state, out
-
-    state, hist = jax.lax.scan(body, state, None, length=iters)
-    return state, (hist if eval_fn is not None else None)
+    Executes through the plan/execute engine: the loop-invariants of
+    Prop. 1 (Z, K, u, counts, box, step size) are compiled once by
+    ``repro.engine.compile_problem`` and only the state-dependent body
+    runs per iteration — bit-for-bit identical to scanning
+    ``dtsvm_step`` (tested), ~the Hessian build cheaper per iteration.
+    ``qp_solver`` selects the inner dual engine ("fista" | "pg" |
+    "pallas_fused", see ``repro.engine.qp_engines``).
+    """
+    from repro.engine import plan as engine_plan   # deferred: avoids cycle
+    pl = engine_plan.compile_problem(prob, qp_iters=qp_iters,
+                                     qp_solver=qp_solver)
+    return pl.run(state=state, iters=iters, eval_fn=eval_fn)
 
 
 # ---------------------------------------------------------------------------

@@ -1,9 +1,9 @@
 """Decentralized SPMD execution of DTSVM: one mesh axis = the node graph.
 
-The vmapped ``dtsvm.dtsvm_step`` computes neighbor sums by a dense-adjacency
-einsum on one host.  Here the V nodes live on V devices of a ``nodes`` mesh
-axis, each holding ONLY its own data shard — the paper's deployment model —
-and the neighbor sum becomes a collective (DESIGN.md §3 hardware mapping):
+The single-host path computes neighbor sums by a dense-adjacency einsum.
+Here the V nodes live on V devices of a ``nodes`` mesh axis, each holding
+ONLY its own data shard — the paper's deployment model — and the neighbor
+sum becomes a collective (DESIGN.md §3 hardware mapping):
 
 - ``topology="graph"``: one ``all_gather`` of the (2p+2)-sized decision
   vectors followed by an adjacency-row mask.  Neighbor-only *information
@@ -14,6 +14,11 @@ and the neighbor sum becomes a collective (DESIGN.md §3 hardware mapping):
 
 Both reuse the exact Prop.-1 math via the ``nbr_reduce`` hook, so the SPMD
 run is numerically identical to the single-host reference (tested).
+
+Execution shards the *plan* (repro.engine): each node compiles its local
+loop-invariants (Z, K, u, counts, box, step size) ONCE inside the
+shard_map region, then scans the light state-dependent iteration — the
+Hessian is never rebuilt per iteration per node.
 """
 from __future__ import annotations
 
@@ -36,11 +41,8 @@ def make_node_mesh(V: int, axis: str = "nodes") -> Mesh:
     return jax.sharding.Mesh(devs, (axis,))
 
 
-def _shard_step(state, prob, adj_rows, active_global, *, axis: str,
-                topology: str, qp_iters: int):
-    """Runs on (V_local, ...) shards inside shard_map."""
-    adjf = adj_rows.astype(jnp.float32)                      # (Vl, V)
-
+def _nbr_reduce_for(adjf, *, axis: str, topology: str):
+    """The collective neighbor sum for (V_local, ...) shards."""
     if topology == "ring":
         def nbr_reduce(arr):                                 # (Vl,T,D), Vl==1
             n = jax.lax.psum(1, axis)
@@ -53,23 +55,36 @@ def _shard_step(state, prob, adj_rows, active_global, *, axis: str,
         def nbr_reduce(arr):
             full = jax.lax.all_gather(arr, axis, axis=0, tiled=True)  # (V,T,D)
             return jnp.einsum("vu,utd->vtd", adjf, full)
+    return nbr_reduce
 
+
+def _shard_run(state, prob, adj_rows, active_global, *, axis: str,
+               topology: str, qp_iters: int, iters: int,
+               qp_solver: str = "fista"):
+    """``iters`` planned ADMM iterations on (V_local, ...) shards inside
+    shard_map: invariants compile once per node, then the light
+    ``engine.plan_step`` body scans — never rebuilding the Hessian."""
+    from repro.engine import invariants as inv_lib
+    from repro.engine import plan as engine_plan
+
+    adjf = adj_rows.astype(jnp.float32)                      # (Vl, V)
+    nbr_reduce = _nbr_reduce_for(adjf, axis=axis, topology=topology)
     nbr_counts = jnp.einsum("vu,ut->vt", adjf, active_global)
-    return dtsvm.dtsvm_step(state, prob, qp_iters=qp_iters,
-                            nbr_reduce=nbr_reduce, nbr_counts=nbr_counts)
+    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts)
+
+    def body(st, _):
+        st = engine_plan.plan_step(prob, inv, st, qp_iters=qp_iters,
+                                   qp_solver=qp_solver,
+                                   nbr_reduce=nbr_reduce)
+        return st, None
+
+    state, _ = jax.lax.scan(body, state, None, length=iters)
+    return state
 
 
-def build_runner(mesh: Mesh, *, axis: str = "nodes",
-                 topology: str = "graph", qp_iters: int = 200,
-                 iters: int = 1):
-    """A reusable jitted ``run(state, prob) -> state`` executing ``iters``
-    decentralized ADMM iterations on ``mesh``.
-
-    The returned callable has a stable identity, so calling it repeatedly
-    (e.g. once per evaluation point of a risk curve) compiles ONCE and
-    hits jax's jit cache afterwards — unlike re-invoking
-    ``run_dtsvm_dist``, which rebuilds its closures every call.
-    """
+def _node_specs(axis: str):
+    """Sharding specs: state/problem/invariants over the node axis."""
+    from repro.engine import invariants as inv_lib
     node = P(axis)
     repl = P()
     state_spec = dtsvm.DTSVMState(r=node, alpha=node, beta=node, lam=node)
@@ -80,30 +95,101 @@ def build_runner(mesh: Mesh, *, axis: str = "nodes",
     prob_spec = jax.tree.map(lambda s: s if isinstance(s, P) else repl,
                              prob_spec,
                              is_leaf=lambda x: isinstance(x, P) or x is None)
+    inv_spec = inv_lib.PlanInvariants(ntp=node, nbr=node, u=node, a=node,
+                                      Z=node, K=node, hi=node, L=node)
+    return node, repl, state_spec, prob_spec, inv_spec
+
+
+def build_runner(mesh: Mesh, *, axis: str = "nodes",
+                 topology: str = "graph", qp_iters: int = 200,
+                 iters: int = 1, qp_solver: str = "fista"):
+    """A reusable jitted ``run(state, prob) -> state`` executing ``iters``
+    decentralized ADMM iterations on ``mesh`` (invariants compiled once
+    per call inside the shard).
+
+    The returned callable has a stable identity, so calling it repeatedly
+    compiles ONCE and hits jax's jit cache afterwards — unlike re-invoking
+    ``run_dtsvm_dist``, which rebuilds its closures every call.  For
+    repeated SHORT calls against one problem (a host-evaluated risk
+    curve), use ``build_planned_runner`` instead so the invariants are
+    not recompiled on every call.
+    """
+    node, repl, state_spec, prob_spec, _ = _node_specs(axis)
 
     @functools.partial(
         compat.shard_map, mesh=mesh,
         in_specs=(state_spec, prob_spec, node, repl),
         check_vma=False, out_specs=state_spec)
-    def one_iter(st, pr, adj_r, act_g):
-        return _shard_step(st, pr, adj_r, act_g, axis=axis,
-                           topology=topology, qp_iters=qp_iters)
+    def run_shard(st, pr, adj_r, act_g):
+        return _shard_run(st, pr, adj_r, act_g, axis=axis,
+                          topology=topology, qp_iters=qp_iters,
+                          iters=iters, qp_solver=qp_solver)
 
     @jax.jit
     def run(st, pr):
+        # adj rows shard over nodes; the active table stays global
+        return run_shard(st, pr, pr.adj, pr.active)
+
+    return run
+
+
+def build_planned_runner(mesh: Mesh, *, axis: str = "nodes",
+                         topology: str = "graph", qp_iters: int = 200,
+                         iters: int = 1, qp_solver: str = "fista"):
+    """Two-phase decentralized execution: ``(compile_fn, step_fn)``.
+
+    ``inv = compile_fn(prob)`` builds the node-sharded plan invariants
+    (one weighted-Gram Hessian build per fit); ``step_fn(state, prob,
+    inv)`` then advances ``iters`` ADMM iterations against them.  This
+    is the host-eval history path: per-iteration evaluation calls
+    ``step_fn`` repeatedly WITHOUT recompiling the invariants each time.
+    """
+    from repro.engine import invariants as inv_lib
+    from repro.engine import plan as engine_plan
+
+    node, repl, state_spec, prob_spec, inv_spec = _node_specs(axis)
+
+    @functools.partial(
+        compat.shard_map, mesh=mesh, in_specs=(prob_spec, node, repl),
+        check_vma=False, out_specs=inv_spec)
+    def compile_shard(pr, adj_r, act_g):
+        adjf = adj_r.astype(jnp.float32)
+        nbr_counts = jnp.einsum("vu,ut->vt", adjf, act_g)
+        return inv_lib.compute_invariants(pr, nbr_counts=nbr_counts)
+
+    @functools.partial(
+        compat.shard_map, mesh=mesh,
+        in_specs=(state_spec, prob_spec, inv_spec, node),
+        check_vma=False, out_specs=state_spec)
+    def step_shard(st, pr, inv, adj_r):
+        adjf = adj_r.astype(jnp.float32)
+        nbr_reduce = _nbr_reduce_for(adjf, axis=axis, topology=topology)
+
         def body(s, _):
-            # adj rows shard over nodes; the active table stays global
-            return one_iter(s, pr, pr.adj, pr.active), None
+            s = engine_plan.plan_step(pr, inv, s, qp_iters=qp_iters,
+                                      qp_solver=qp_solver,
+                                      nbr_reduce=nbr_reduce)
+            return s, None
+
         st, _ = jax.lax.scan(body, st, None, length=iters)
         return st
 
-    return run
+    @jax.jit
+    def compile_fn(pr):
+        return compile_shard(pr, pr.adj, pr.active)
+
+    @jax.jit
+    def step_fn(st, pr, inv):
+        return step_shard(st, pr, inv, pr.adj)
+
+    return compile_fn, step_fn
 
 
 def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
                    mesh: Optional[Mesh] = None, axis: str = "nodes",
                    topology: str = "graph", qp_iters: int = 200,
-                   state: Optional[dtsvm.DTSVMState] = None):
+                   state: Optional[dtsvm.DTSVMState] = None,
+                   qp_solver: str = "fista"):
     """Decentralized run.  Shards every (V, ...) array over the node axis."""
     V = prob.X.shape[0]
     if mesh is None:
@@ -111,5 +197,5 @@ def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
     if state is None:
         state = dtsvm.init_state(prob)
     run = build_runner(mesh, axis=axis, topology=topology,
-                       qp_iters=qp_iters, iters=iters)
+                       qp_iters=qp_iters, iters=iters, qp_solver=qp_solver)
     return run(state, prob)

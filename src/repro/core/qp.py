@@ -11,19 +11,26 @@ Solvers (all fixed-iteration ``jax.lax`` loops, jit/vmap-friendly):
 - ``kkt_residual``          optimality measure used by tests
 
 K is PSD by construction (a Gram matrix), so the Gershgorin row-sum bound
-dominates the spectral norm and 1/L steps are safe.
+dominates the spectral norm and 1/L steps are safe.  Both solvers accept
+a precomputed ``L`` — K is loop-invariant across a fit, so the engine's
+Plan derives the bound once (``gershgorin_lipschitz``) instead of every
+solve.
 """
 from __future__ import annotations
 
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 
-def _lipschitz(K: jnp.ndarray) -> jnp.ndarray:
-    """Gershgorin upper bound on ||K||_2 for PSD K."""
-    return jnp.maximum(jnp.max(jnp.sum(jnp.abs(K), axis=-1)), 1e-12)
+def gershgorin_lipschitz(K: jnp.ndarray) -> jnp.ndarray:
+    """Gershgorin upper bound on ||K||_2 for PSD K, batched:
+    (..., N, N) -> (...)."""
+    return jnp.maximum(jnp.max(jnp.sum(jnp.abs(K), axis=-1), axis=-1), 1e-12)
+
+
+_lipschitz = gershgorin_lipschitz
 
 
 def _project(lam, hi):
@@ -31,9 +38,12 @@ def _project(lam, hi):
 
 
 def solve_box_qp_pg(K: jnp.ndarray, q: jnp.ndarray, hi: jnp.ndarray,
-                    iters: int = 200, lam0=None) -> jnp.ndarray:
-    """Projected-gradient ascent with constant step 1/L."""
-    L = _lipschitz(K)
+                    iters: int = 200, lam0=None,
+                    L: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Projected-gradient ascent with constant step 1/L (L: optional
+    precomputed Gershgorin bound)."""
+    if L is None:
+        L = gershgorin_lipschitz(K)
     step = 1.0 / L
     lam = jnp.zeros_like(q) if lam0 is None else lam0
     lam = _project(lam, hi)
@@ -46,9 +56,12 @@ def solve_box_qp_pg(K: jnp.ndarray, q: jnp.ndarray, hi: jnp.ndarray,
 
 
 def solve_box_qp_fista(K: jnp.ndarray, q: jnp.ndarray, hi: jnp.ndarray,
-                       iters: int = 200, lam0=None) -> jnp.ndarray:
-    """FISTA-style accelerated projected gradient (monotone restart-free)."""
-    L = _lipschitz(K)
+                       iters: int = 200, lam0=None,
+                       L: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """FISTA-style accelerated projected gradient (monotone restart-free).
+    ``L``: optional precomputed Gershgorin bound."""
+    if L is None:
+        L = gershgorin_lipschitz(K)
     step = 1.0 / L
     lam = jnp.zeros_like(q) if lam0 is None else _project(lam0, hi)
     state = (lam, lam, jnp.float32(1.0))

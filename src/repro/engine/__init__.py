@@ -1,0 +1,26 @@
+"""repro.engine — the plan/execute compute layer under every solver.
+
+    plan = compile_problem(prob, cfg)      # invariants once: Z, K, u, hi, L
+    state = plan.step(state)               # one light ADMM iteration
+    state, hist = plan.run(state, iters, eval_fn)
+
+plus the pluggable QP engine registry (``qp_engines``: "fista" | "pg" |
+"pallas_fused") and the incremental ``Plan.replan`` used by the online
+Session.  See ``engine.plan`` for the full story.
+"""
+from repro.engine import qp_engines
+from repro.engine.invariants import (PlanInvariants, compute_invariants,
+                                     update_invariants)
+from repro.engine.plan import DEFAULT_QP_SOLVER, Plan, compile_problem, \
+    plan_step
+
+__all__ = [
+    "DEFAULT_QP_SOLVER",
+    "Plan",
+    "PlanInvariants",
+    "compile_problem",
+    "compute_invariants",
+    "plan_step",
+    "qp_engines",
+    "update_invariants",
+]

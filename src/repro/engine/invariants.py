@@ -1,0 +1,103 @@
+"""Loop-invariant precomputation for the Prop.-1 ADMM iteration.
+
+Every quantity here depends only on the *problem* (data, graph, masks,
+hyper-parameters) — never on the ADMM state — so a fit() computes it
+exactly once instead of once per iteration:
+
+    Z    (V,T,N,p+1)   label-signed augmented data  (Y X~, mask-zeroed)
+    a    (V,T,p+1)     [I,I] U^{-1} [I,I]^T diagonal
+    K    (V,T,N,N)     dual Hessian  Z diag(a) Z^T  — the hot spot
+    u    (V,T,2p+2)    diag(U_vt), eq. (10)
+    ntp  (V,T)         coupling pair count  (T_v - 1) * couple * active
+    nbr  (V,T)         active-neighbor count
+    hi   (V,T,N)       QP box  box_scale * C * mask * active
+    L    (V,T)         Gershgorin Lipschitz bound on K (the QP step size)
+
+``compute_invariants`` is pure jnp (traceable inside jit / shard_map,
+where each node computes only its own shard).  ``update_invariants`` is
+the *incremental* host-side path behind the online Session: a change to
+``active``/``couple`` recomputes counts/u/a/hi (cheap) and only the K
+slices whose ``a`` row actually changed — untouched (v,t) reuse their
+Gram block bit-for-bit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dtsvm as core
+from repro.core import qp as qp_lib
+from repro.kernels import ops as kops
+
+
+class PlanInvariants(NamedTuple):
+    ntp: jnp.ndarray      # (V, T)
+    nbr: jnp.ndarray      # (V, T)
+    u: jnp.ndarray        # (V, T, 2p+2)
+    a: jnp.ndarray        # (V, T, p+1)
+    Z: jnp.ndarray        # (V, T, N, p+1)
+    K: jnp.ndarray        # (V, T, N, N)
+    hi: jnp.ndarray       # (V, T, N)
+    L: jnp.ndarray        # (V, T)
+
+
+def _masks_part(prob: core.DTSVMProblem,
+                nbr_counts: Optional[jnp.ndarray] = None):
+    """The active/couple-dependent pieces: counts, u, a, hi."""
+    p = prob.X.shape[-1]
+    ntp, nbr = core._counts(prob, nbr_counts)
+    u = core._u_diag(prob, ntp, nbr)
+    a = 1.0 / u[..., : p + 1] + 1.0 / u[..., p + 1:]
+    hi = prob.box_scale * prob.C * prob.mask * prob.active[..., None]
+    return ntp, nbr, u, a, hi
+
+
+def compute_invariants(prob: core.DTSVMProblem, *,
+                       nbr_counts: Optional[jnp.ndarray] = None
+                       ) -> PlanInvariants:
+    """All loop-invariants of Prop. 1, from scratch.  Pure jnp."""
+    V, T, N, p = prob.X.shape
+    ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
+    Xa = jnp.concatenate([prob.X, jnp.ones((V, T, N, 1), jnp.float32)], -1)
+    Z = prob.y[..., None] * Xa * prob.mask[..., None]
+    K = kops.weighted_gram(Z, a)
+    L = qp_lib.gershgorin_lipschitz(K)
+    return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi, L=L)
+
+
+def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,
+                      active=None, couple=None
+                      ) -> Tuple[core.DTSVMProblem, PlanInvariants, int]:
+    """Incrementally re-plan after a membership change (host-side only).
+
+    Returns ``(new_prob, new_inv, n_recomputed)`` where ``n_recomputed``
+    is the number of (v,t) Gram slices that had to be rebuilt; the other
+    ``V*T - n`` slices are reused unchanged (bit-for-bit — a Gram block
+    depends only on Z, which membership events never touch, and its own
+    ``a`` row).
+    """
+    new_prob = prob
+    if active is not None:
+        new_prob = new_prob._replace(
+            active=jnp.asarray(active, jnp.float32))
+    if couple is not None:
+        new_prob = new_prob._replace(
+            couple=jnp.asarray(couple, jnp.float32))
+    ntp, nbr, u, a, hi = _masks_part(new_prob)
+    changed = np.any(np.asarray(a) != np.asarray(inv.a), axis=-1)   # (V,T)
+    n = int(changed.sum())
+    if n == 0:
+        K, L = inv.K, inv.L
+    elif n == changed.size:
+        K = kops.weighted_gram(inv.Z, a)
+        L = qp_lib.gershgorin_lipschitz(K)
+    else:
+        iv, it = np.nonzero(changed)
+        K_sub = kops.weighted_gram(inv.Z[iv, it], a[iv, it])        # (n,N,N)
+        K = inv.K.at[iv, it].set(K_sub)
+        L = inv.L.at[iv, it].set(qp_lib.gershgorin_lipschitz(K_sub))
+    new_inv = PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=inv.Z, K=K,
+                             hi=hi, L=L)
+    return new_prob, new_inv, n

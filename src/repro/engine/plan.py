@@ -1,0 +1,168 @@
+"""Plan/execute: compile a DTSVM problem once, iterate it many times.
+
+The Prop.-1 iteration splits cleanly into
+
+    invariants  —  Z, K, u, a, counts, box, Lipschitz bound: functions of
+                   the PROBLEM only (see ``engine.invariants``), and
+    step        —  the f^{(k)}-dependent linear term + the dual solve +
+                   the primal/multiplier updates: the only part that
+                   touches the ADMM state.
+
+``compile_problem`` precomputes the former into a ``Plan``; ``Plan.step``
+/ ``Plan.run`` execute the latter.  A fit() therefore builds the dual
+Hessian K = Z diag(a) Z^T (the declared hot spot) exactly once instead
+of once per ADMM iteration, and the inner QP engine is pluggable
+(``engine.qp_engines``: "fista" | "pg" | "pallas_fused").
+
+Results are bit-for-bit identical to scanning the legacy
+``core.dtsvm.dtsvm_step`` (tested: tests/test_engine.py) — the step
+consumes precomputed values that are bitwise what the legacy path
+recomputes each iteration.
+
+``Plan.replan`` is the incremental path behind the online Session
+(Fig. 7): membership events rebuild only the invariants they touch.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dtsvm as core
+from repro.engine import invariants as inv_lib
+from repro.engine import qp_engines
+
+DEFAULT_QP_SOLVER = "fista"
+
+
+def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
+              state: core.DTSVMState, *, qp_iters: int = 200,
+              qp_solver: str = DEFAULT_QP_SOLVER,
+              nbr_reduce: Optional[Callable] = None) -> core.DTSVMState:
+    """One Prop.-1 iteration (eqs. 6-9) on precomputed invariants.
+
+    Pure and traceable — the SPMD backend calls this inside shard_map
+    with a collective ``nbr_reduce`` and per-node invariant shards.
+    """
+    p = prob.X.shape[-1]
+    if nbr_reduce is None:
+        nbr_reduce = core._default_nbr_reduce(prob)
+    ntp, nbr, u, Z = inv.ntp, inv.nbr, inv.u, inv.Z
+
+    f = core._f_vec(prob, state, ntp, nbr, nbr_reduce)
+    g = f[..., : p + 1] / u[..., : p + 1] + f[..., p + 1:] / u[..., p + 1:]
+    q = prob.mask + jnp.einsum("vtnd,vtd->vtn", Z, g)
+
+    lam = qp_engines.get(qp_solver)(inv.K, q, inv.hi, state.lam,
+                                    iters=qp_iters, L=inv.L)   # eq. (6)
+
+    zl = jnp.einsum("vtn,vtnd->vtd", lam, Z)                   # X^T Y lam
+    rhs = jnp.concatenate([zl, zl], axis=-1) - f               # [I,I]^T(..)-f
+    r_new = rhs / u                                            # eq. (7)
+    act = prob.active[..., None]
+    r_new = r_new * act + state.r * (1.0 - act)                # freeze
+
+    # eq. (8): alpha update on the (w0, b0) block, coupled nodes only
+    r_act = r_new * act
+    task_sum = jnp.sum(r_act, axis=1, keepdims=True) - r_act
+    d_alpha = (ntp[..., None] * r_new - task_sum * prob.couple[:, None, None])
+    alpha = state.alpha + 0.5 * prob.eta1 * d_alpha[..., : p + 1] * act
+
+    # eq. (9): beta update over active neighbors
+    nbr_sum = nbr_reduce(r_act)
+    d_beta = nbr[..., None] * r_new - nbr_sum
+    beta = state.beta + 0.5 * prob.eta2 * d_beta * act
+
+    return core.DTSVMState(r=r_new, alpha=alpha, beta=beta, lam=lam)
+
+
+class Plan:
+    """A compiled DTSVM problem: invariants + the light per-iteration body.
+
+    ``stats`` tracks the invariant economy across the plan's lifetime:
+    ``gram_slices_computed`` / ``gram_slices_reused`` count (v,t) Gram
+    blocks built vs. carried over by ``replan``, ``replans`` the number
+    of incremental re-plans.
+    """
+
+    def __init__(self, prob: core.DTSVMProblem,
+                 inv: inv_lib.PlanInvariants, *, qp_iters: int = 200,
+                 qp_solver: str = DEFAULT_QP_SOLVER,
+                 nbr_reduce: Optional[Callable] = None,
+                 stats: Optional[dict] = None):
+        self.prob = prob
+        self.inv = inv
+        self.qp_iters = qp_iters
+        self.qp_solver = qp_solver
+        self._nbr_reduce = nbr_reduce
+        V, T = prob.X.shape[:2]
+        self.stats = stats if stats is not None else {
+            "gram_slices_computed": V * T,
+            "gram_slices_reused": 0,
+            "replans": 0,
+        }
+
+    # -- execution ---------------------------------------------------------
+    def init_state(self) -> core.DTSVMState:
+        return core.init_state(self.prob)
+
+    def step(self, state: core.DTSVMState) -> core.DTSVMState:
+        """One ADMM iteration on the precomputed invariants."""
+        return plan_step(self.prob, self.inv, state, qp_iters=self.qp_iters,
+                         qp_solver=self.qp_solver,
+                         nbr_reduce=self._nbr_reduce)
+
+    def run(self, state: Optional[core.DTSVMState] = None, iters: int = 1,
+            eval_fn: Optional[Callable] = None):
+        """Scan ``iters`` iterations.  Returns (state, history) where
+        history stacks ``eval_fn(state)`` after every iteration (or
+        None) — the same contract as the legacy ``run_dtsvm``."""
+        if state is None:
+            state = self.init_state()
+
+        def body(st, _):
+            st = self.step(st)
+            out = eval_fn(st) if eval_fn is not None else jnp.float32(0)
+            return st, out
+
+        state, hist = jax.lax.scan(body, state, None, length=iters)
+        return state, (hist if eval_fn is not None else None)
+
+    # -- incremental re-planning (the online Session path) -----------------
+    def replan(self, *, active=None, couple=None) -> "Plan":
+        """A new Plan for changed membership masks, reusing every
+        invariant the change does not touch (host-side; see
+        ``invariants.update_invariants``)."""
+        prob, inv, n = inv_lib.update_invariants(
+            self.prob, self.inv, active=active, couple=couple)
+        V, T = prob.X.shape[:2]
+        stats = dict(self.stats)
+        stats["replans"] += 1
+        stats["gram_slices_computed"] += n
+        stats["gram_slices_reused"] += V * T - n
+        return Plan(prob, inv, qp_iters=self.qp_iters,
+                    qp_solver=self.qp_solver, nbr_reduce=self._nbr_reduce,
+                    stats=stats)
+
+
+def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
+                    qp_iters: Optional[int] = None,
+                    qp_solver: Optional[str] = None,
+                    nbr_reduce: Optional[Callable] = None,
+                    nbr_counts=None) -> Plan:
+    """Precompute every loop-invariant of Prop. 1 into a ``Plan``.
+
+    ``cfg`` may be any object with ``qp_iters`` / ``qp_solver``
+    attributes (e.g. ``repro.api.SolverConfig``); explicit keywords
+    override it.  Pure jnp — safe to call under jit (the incremental
+    ``Plan.replan`` is the only host-side part of the engine).
+    """
+    if qp_iters is None:
+        qp_iters = getattr(cfg, "qp_iters", 200)
+    if qp_solver is None:
+        qp_solver = getattr(cfg, "qp_solver", DEFAULT_QP_SOLVER)
+    qp_engines.get(qp_solver)        # fail fast on unknown engines
+    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts)
+    return Plan(prob, inv, qp_iters=qp_iters, qp_solver=qp_solver,
+                nbr_reduce=nbr_reduce)

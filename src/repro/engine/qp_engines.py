@@ -1,0 +1,107 @@
+"""Pluggable QP engines for the dual sub-problem (6) of Prop. 1.
+
+An engine solves the batched box QP
+
+    maximize   -1/2 lam^T K lam + q^T lam,   0 <= lam <= hi
+
+over arbitrary leading batch dims (K: (..., N, N), everything else
+(..., N)) with a fixed iteration count and an optional precomputed
+Lipschitz bound ``L`` (the Plan supplies the Gershgorin bound once per
+fit instead of every solve):
+
+    solve(K, q, hi, lam0=None, *, iters, L=None) -> lam
+
+Built-ins:
+
+- ``"fista"``        Nesterov-accelerated projected gradient — the
+                     default, identical to the legacy `dtsvm_step` path.
+- ``"pg"``           plain projected-gradient ascent.
+- ``"pallas_fused"`` the fused matvec+step+projection Pallas kernel
+                     (``repro.kernels.qp_step``) iterated via
+                     ``kernels.ops.qp_pg_step`` — compiled on TPU,
+                     interpret-mode under ``REPRO_USE_PALLAS=1`` on CPU,
+                     jnp oracle otherwise.  Same fixed point as ``"pg"``.
+
+Register new engines with ``@qp_engines.register("name")``; select per
+fit via ``SolverConfig(qp_solver="name")``.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import qp as qp_lib
+from repro.kernels import ops as kops
+
+_REGISTRY: Dict[str, Callable] = {}
+
+
+def register(name: str):
+    """Register a QP engine under ``name`` (decorator)."""
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def get(name: str) -> Callable:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown QP engine {name!r}; available: {sorted(_REGISTRY)}"
+        ) from None
+
+
+def names():
+    return sorted(_REGISTRY)
+
+
+def _prep(K, q, hi, lam0, L):
+    """Default the warm start and the Lipschitz bound."""
+    if lam0 is None:
+        lam0 = jnp.zeros_like(q)
+    if L is None:
+        L = qp_lib.gershgorin_lipschitz(K)
+    return lam0, L
+
+
+def _vmapped(solve1, K, q, hi, lam0, L, iters):
+    """Apply a single-problem solver over the leading batch dims."""
+    fn = lambda Kb, qb, hb, l0, Lb: solve1(Kb, qb, hb, iters=iters,
+                                           lam0=l0, L=Lb)
+    for _ in range(K.ndim - 2):
+        fn = jax.vmap(fn)
+    return fn(K, q, hi, lam0, L)
+
+
+@register("fista")
+def solve_fista(K, q, hi, lam0=None, *, iters: int,
+                L: Optional[jnp.ndarray] = None):
+    lam0, L = _prep(K, q, hi, lam0, L)
+    return _vmapped(qp_lib.solve_box_qp_fista, K, q, hi, lam0, L, iters)
+
+
+@register("pg")
+def solve_pg(K, q, hi, lam0=None, *, iters: int,
+             L: Optional[jnp.ndarray] = None):
+    lam0, L = _prep(K, q, hi, lam0, L)
+    return _vmapped(qp_lib.solve_box_qp_pg, K, q, hi, lam0, L, iters)
+
+
+@register("pallas_fused")
+def solve_pallas_fused(K, q, hi, lam0=None, *, iters: int,
+                       L: Optional[jnp.ndarray] = None):
+    """Iterate the fused PG-step kernel: each step is one HBM round trip
+    (matvec, gradient step and box projection fused — see
+    ``repro.kernels.qp_step``)."""
+    lam0, L = _prep(K, q, hi, lam0, L)
+    gamma = 1.0 / L                                  # (...,) per problem
+    lam = jnp.clip(lam0, 0.0, hi)
+
+    def body(_, lam):
+        return kops.qp_pg_step(lam, K, q, hi, gamma)
+
+    return jax.lax.fori_loop(0, iters, body, lam)

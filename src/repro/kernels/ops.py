@@ -5,7 +5,15 @@ On TPU the Pallas kernels run compiled; in this CPU container they run in
 BlockSpec tiling and kernel semantics bit-for-bit against ``ref.py``).
 Because interpret mode is slow, the *default* CPU execution path is the
 jnp oracle; set ``REPRO_USE_PALLAS=1`` to force the interpreted kernels
-(the kernel test suite does this).
+(the kernel-suite CI lane and the engine's QP-equivalence tests do this).
+
+Both wrappers are live solve-path code, not just benchmarks:
+
+- ``weighted_gram`` builds the dual Hessian K = Z diag(a) Z^T exactly
+  once per fit, inside ``repro.engine.compile_problem``.
+- ``qp_pg_step`` is the inner loop of the ``"pallas_fused"`` QP engine
+  (``repro.engine.qp_engines``) — one fused matvec+step+projection per
+  dual iteration, selected via ``SolverConfig(qp_solver="pallas_fused")``.
 """
 from __future__ import annotations
 
@@ -48,16 +56,21 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
 
 
 def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:
-    """Fused projected-gradient step over arbitrary leading batch dims."""
+    """Fused projected-gradient step over arbitrary leading batch dims.
+
+    ``gamma`` may be a scalar or a per-problem (...,) step-size array
+    matching the batch dims (1/L per (v,t) sub-problem)."""
     if not _use_pallas():
         return ref.qp_pg_step(lam, K, q, hi, gamma)
-    fn = lambda l1, K2, q1, h1: qp_kernel.qp_pg_step_1d(
-        l1, K2, q1, h1, gamma, interpret=_interpret())
+    fn = lambda l1, K2, q1, h1, g0: qp_kernel.qp_pg_step_1d(
+        l1, K2, q1, h1, g0, interpret=_interpret())
     batch = lam.shape[:-1]
+    gamma = jnp.asarray(gamma, jnp.float32)
     if batch:
         flat = lambda x, nd: x.reshape((-1,) + x.shape[len(batch):])
+        gamma_b = flat(jnp.broadcast_to(gamma, batch), 0)
         out = jax.lax.map(
             lambda args: fn(*args),
-            (flat(lam, 1), flat(K, 2), flat(q, 1), flat(hi, 1)))
+            (flat(lam, 1), flat(K, 2), flat(q, 1), flat(hi, 1), gamma_b))
         return out.reshape(batch + out.shape[-1:])
-    return fn(lam, K, q, hi)
+    return fn(lam, K, q, hi, gamma)

@@ -14,12 +14,17 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
 
 
 def qp_pg_step(lam: jnp.ndarray, K: jnp.ndarray, q: jnp.ndarray,
-               hi: jnp.ndarray, gamma: float) -> jnp.ndarray:
+               hi: jnp.ndarray, gamma) -> jnp.ndarray:
     """One projected-gradient ascent step of the box QP:
 
         lam <- clip(lam + gamma * (q - K lam), 0, hi)
 
-    lam/q/hi: (..., N), K: (..., N, N).
+    lam/q/hi: (..., N), K: (..., N, N).  ``gamma`` is a scalar or a
+    per-problem (...,) array of step sizes (the engine supplies 1/L per
+    (v,t) sub-problem).
     """
+    gamma = jnp.asarray(gamma, lam.dtype)
+    if gamma.ndim:
+        gamma = gamma[..., None]
     grad = q - jnp.einsum("...nm,...m->...n", K, lam)
     return jnp.clip(lam + gamma * grad, 0.0, hi)
