@@ -18,6 +18,11 @@ there, so the delta is modest) and ``stepwise`` (one eager call per
 iteration — the session / direct-``dtsvm_step``-caller pattern, where
 no compiler can hoist across calls and the plan's reuse is structural).
 
+A third section, ``sweep``, times the paper's fig4 (C, eps2) grid two
+ways — a serial per-config ``compile_problem`` loop (re-tracing and
+re-compiling each grid point, the pre-sweep driver pattern) vs ONE
+batched ``compile_sweep`` plan — and records the amortization win.
+
 Outputs are verified bit-for-bit identical before timing is reported.
 The full (non ``--fast``) run writes ``BENCH_fit.json`` at the repo
 root (the perf-trajectory seed); both modes emit the ``run.py`` CSV
@@ -40,6 +45,69 @@ from repro.core import graph
 from repro.data import synthetic
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _bench_sweep(iters, qp_iters, *, V=10, n_per_task=(50, 400),
+                 degree=0.8667, c_grid=(0.001, 0.01, 0.1),
+                 e2_grid=(0.1, 1.0, 10.0, 100.0), seed=0, repeats=2):
+    """Serial per-config loop vs one batched SweepPlan on the paper's
+    fig4 (C, eps2) grid.  The serial loop re-traces and re-compiles its
+    scan per grid point (fresh closures — the fixed cost the sweep
+    amortizes); the batched path compiles the whole grid once.  Results
+    are asserted bitwise identical before timings are reported."""
+    n_train = np.zeros((V, len(n_per_task)), int)
+    for t, n in enumerate(n_per_task):
+        n_train[:, t] = synthetic.split_counts(n, V)
+    data = synthetic.make_multitask_data(V=V, T=len(n_per_task), p=10,
+                                         n_train=n_train, n_test=64,
+                                         seed=seed)
+    A = graph.make_graph("random", V, degree=degree, seed=seed)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A)
+    cfgs = [dict(C=c, eps2=e2) for c in c_grid for e2 in e2_grid]
+    jax.block_until_ready(prob.X)
+
+    def serial():
+        out = []
+        for pc in engine.per_config_problems(prob, cfgs):
+            pl = engine.compile_problem(pc, qp_iters=qp_iters)
+            st, _ = pl.run(iters=iters)
+            out.append(st)
+        return out
+
+    def batched():
+        splan = engine.compile_sweep(prob, cfgs, qp_iters=qp_iters)
+        st, _ = splan.run(iters=iters)
+        return st
+
+    dt_serial = dt_batched = float("inf")
+    last_s = last_b = None
+    for _ in range(repeats):
+        t0 = time.time()
+        last_s = jax.block_until_ready(serial())
+        dt_serial = min(dt_serial, time.time() - t0)
+        t0 = time.time()
+        last_b = jax.block_until_ready(batched())
+        dt_batched = min(dt_batched, time.time() - t0)
+
+    for s, st in enumerate(last_s):
+        for a, b in zip(jax.tree.leaves(st),
+                        jax.tree.leaves(jax.tree.map(lambda x: x[s],
+                                                     last_b))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    return {
+        "config": {"V": V, "T": len(n_per_task), "N": int(prob.X.shape[2]),
+                   "p": int(prob.X.shape[3]), "iters": iters,
+                   "qp_iters": qp_iters, "n_configs": len(cfgs),
+                   "grid": "fig4 (C, eps2)",
+                   "backend": jax.default_backend()},
+        "serial_s": dt_serial,
+        "batched_s": dt_batched,
+        "serial_ms_per_fit": 1e3 * dt_serial / len(cfgs),
+        "batched_ms_per_fit": 1e3 * dt_batched / len(cfgs),
+        "speedup": dt_serial / dt_batched,
+        "bitwise_identical": True,
+    }
 
 
 def _legacy_run(prob, iters, qp_iters, state):
@@ -133,10 +201,13 @@ def _bench_one(V, T, n_per_vt, p, iters, qp_iters):
 
 def run(fast: bool = False):
     if fast:
-        return {"paper": _bench_one(8, 2, 32, 10, 10, 50)}
+        return {"paper": _bench_one(8, 2, 32, 10, 10, 50),
+                "sweep": _bench_sweep(8, 40, c_grid=(0.01, 0.1),
+                                      e2_grid=(1.0, 10.0), repeats=1)}
     recs = {
         "paper": _bench_one(30, 4, 256, 10, 60, 100),
         "wide_p64": _bench_one(30, 4, 256, 64, 60, 100),
+        "sweep": _bench_sweep(60, 100),
     }
     # fast mode is a smoke run on a toy config — never clobber the
     # committed paper-regime perf-trajectory record with it
@@ -149,6 +220,13 @@ def run(fast: bool = False):
 def main(fast=False):
     recs = run(fast)
     for name, rec in recs.items():
+        if name == "sweep":
+            emit("bench_fit_sweep", 1e3 * rec["batched_ms_per_fit"],
+                 f"sweep_speedup={rec['speedup']:.2f}x "
+                 f"serial_ms_fit={rec['serial_ms_per_fit']:.1f} "
+                 f"batched_ms_fit={rec['batched_ms_per_fit']:.1f} "
+                 f"configs={rec['config']['n_configs']}")
+            continue
         emit(f"bench_fit_{name}",
              1e3 * rec["scan"]["planned_ms_per_iter"],
              f"scan_speedup={rec['scan']['speedup']:.2f}x "

@@ -25,7 +25,7 @@ except ModuleNotFoundError:  # fallback: run from a bare checkout
         os.path.abspath(__file__))), "src"))
 
 from repro.api import CSVM, DSVM, DTSVM, SolverConfig      # noqa: E402
-from repro.api import evaluate                              # noqa: E402
+from repro.api import dsvm_overrides, evaluate, sweep_fit  # noqa: E402,F401
 from repro.core import graph                                # noqa: E402
 from repro.data import synthetic                            # noqa: E402
 
@@ -91,6 +91,31 @@ def run_dsvm(data, A, iters, *, eps2=1.0, C_=C, qp_iters=100,
                                 qp_iters=qp_iters))
     return _timed_fit(solver, data, A, active=active,
                       with_history=with_history)
+
+
+def run_sweep(data, A, cfgs, iters, *, eps1=1.0, eps2=1.0, C_=C,
+              qp_iters=100, chain=False, with_history=True):
+    """One batched fit of a whole config grid (``repro.api.sweep_fit``).
+
+    Returns ``(SweepResult, dt)`` where dt times the full sweep —
+    problem construction, the one shared invariant build, and the
+    vmapped ADMM run — matching what ``_timed_fit`` charges a serial
+    fit.  Per-config results are bitwise those of looping ``run_dtsvm``
+    / ``run_dsvm`` over the same grid (tests/test_sweep.py).
+    """
+    X = jnp.asarray(data["X"], jnp.float32)
+    y = jnp.asarray(data["y"], jnp.float32)
+    mask = jnp.asarray(data["mask"], jnp.float32)
+    jax.block_until_ready(X)
+    t0 = time.time()
+    res = sweep_fit(
+        X, y, cfgs, mask=mask, adj=A,
+        base=solver_config(iters=iters, eps1=eps1, eps2=eps2, C_=C_,
+                           qp_iters=qp_iters),
+        X_test=data["X_test"] if with_history else None,
+        y_test=data["y_test"] if with_history else None, chain=chain)
+    jax.block_until_ready(res.states.r)
+    return res, time.time() - t0
 
 
 def run_csvm_per_task(data, *, C_scale=1.0, qp_iters=600):

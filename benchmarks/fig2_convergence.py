@@ -14,6 +14,27 @@ from common import build, emit, run_csvm_per_task, run_dsvm, run_dtsvm, \
     write_csv
 
 
+def curves_for(V, deg, n_tgt, seeds, iters, *, n_src=800, n_test=1800,
+               relatedness=0.93, noise=1.0):
+    """Seed-averaged global risk curves for one network regime:
+    ``(dtsvm (iters, T), dsvm (iters, T), csvm (T,), s_per_iter)``.
+    Parameterized so the golden-figure regression test can drive the
+    identical code path on a tiny regime."""
+    h_t, h_d, csv_r, times = [], [], [], []
+    for seed in seeds:
+        data, A = build(V, [n_tgt, n_src], degree=deg, seed=seed,
+                        noise=noise, relatedness=relatedness,
+                        n_test=n_test)
+        st_t, hist_t, dt_t, _ = run_dtsvm(data, A, iters)
+        st_d, hist_d, dt_d, _ = run_dsvm(data, A, iters)
+        h_t.append(hist_t.mean(1))      # (iters, T) global risk
+        h_d.append(hist_d.mean(1))
+        csv_r.append(run_csvm_per_task(data))
+        times.append(dt_t / iters)
+    return (np.mean(h_t, 0), np.mean(h_d, 0), np.mean(csv_r, 0),
+            float(np.mean(times)))
+
+
 def run(fast: bool = False, seeds=(0, 1, 2, 3)):
     """Two regimes per network: the paper's counts (200 target samples) and
     a scarce variant (40) — on the synthetic proxy, 200 samples saturate a
@@ -28,26 +49,14 @@ def run(fast: bool = False, seeds=(0, 1, 2, 3)):
     rows = []
     summary = {}
     for name, V, deg, n_tgt in nets:
-        h_t, h_d, csv_r, times = [], [], [], []
-        for seed in seeds:
-            data, A = build(V, [n_tgt, 800], degree=deg, seed=seed,
-                            noise=1.0, relatedness=0.93)
-            st_t, hist_t, dt_t, _ = run_dtsvm(data, A, iters)
-            st_d, hist_d, dt_d, _ = run_dsvm(data, A, iters)
-            h_t.append(hist_t.mean(1))      # (iters, T) global risk
-            h_d.append(hist_d.mean(1))
-            csv_r.append(run_csvm_per_task(data))
-            times.append(dt_t / iters)
-        h_t = np.mean(h_t, 0)
-        h_d = np.mean(h_d, 0)
-        csv_r = np.mean(csv_r, 0)
+        h_t, h_d, csv_r, iter_s = curves_for(V, deg, n_tgt, seeds, iters)
         for i in range(iters):
             rows.append([name, i, h_t[i, 0], h_t[i, 1], h_d[i, 0],
                          h_d[i, 1], csv_r[0], csv_r[1]])
         summary[name] = dict(
             dtsvm_t1=h_t[-1, 0], dsvm_t1=h_d[-1, 0], csvm_t1=csv_r[0],
             dtsvm_t3=h_t[-1, 1], dsvm_t3=h_d[-1, 1], csvm_t3=csv_r[1],
-            iter_s=float(np.mean(times)))
+            iter_s=iter_s)
     write_csv("fig2_convergence.csv",
               "network,iter,dtsvm_task1,dtsvm_task3,dsvm_task1,dsvm_task3,"
               "csvm_task1,csvm_task3", rows)

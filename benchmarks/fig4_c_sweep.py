@@ -2,12 +2,36 @@
 
 Same data regime as Fig. 3.  Claim: C trades margin vs error penalty;
 performance needs joint tuning of C and eps2.
+
+The (C, eps2) grid executes as ONE batched ``sweep_fit`` per seed (Z
+shared, per-config box/a-diagonal leaves), bitwise identical to the
+serial per-config loop; ``benchmarks/bench_fit.py`` records the
+serial-vs-batched wall-clock of exactly this grid in BENCH_fit.json.
 """
 import argparse
 
 import numpy as np
 
-from common import build, emit, run_dtsvm, write_csv
+from common import build, emit, run_sweep, write_csv
+
+
+def sweep_grid(c_grid, e2_grid, seeds, iters, *, V=10,
+               n_per_task=(50, 400), degree=0.8667, qp_iters=100):
+    """Grid runner, parameterized so the golden-figure regression test
+    can drive the identical code path on a tiny regime."""
+    keys = [(c, e2) for c in c_grid for e2 in e2_grid]
+    cfgs = [dict(C=c, eps2=e2) for (c, e2) in keys]
+    acc = {k: [] for k in keys}
+    per_iter = []
+    for seed in seeds:
+        data, A = build(V, list(n_per_task), degree=degree, seed=seed)
+        res, dt = run_sweep(data, A, cfgs, iters, qp_iters=qp_iters)
+        finals = res.final_risks()                  # (S, V, T)
+        for s, k in enumerate(keys):
+            acc[k].append(finals[s].mean(0))
+        per_iter.append(dt / (len(cfgs) * iters))
+    risks = {k: np.mean(acc[k], 0) for k in keys}
+    return risks, float(np.mean(per_iter))
 
 
 def run(fast: bool = False):
@@ -15,20 +39,10 @@ def run(fast: bool = False):
     e2_grid = [0.1, 1.0, 10.0, 100.0] if not fast else [1.0, 10.0]
     seeds = range(2 if fast else 5)
     iters = 30 if fast else 60
-    rows, risks, per_iter = [], {}, []
-    for c in c_grid:
-        for e2 in e2_grid:
-            acc = []
-            for seed in seeds:
-                data, A = build(10, [50, 400], degree=0.8667, seed=seed)
-                st, hist, dt, _ = run_dtsvm(data, A, iters, eps2=e2, C_=c)
-                acc.append(hist[-1].mean(0))
-                per_iter.append(dt / iters)
-            m = np.mean(acc, 0)
-            risks[(c, e2)] = m
-            rows.append([c, e2, m[0], m[1]])
+    risks, it_s = sweep_grid(c_grid, e2_grid, seeds, iters)
+    rows = [[c, e2, m[0], m[1]] for (c, e2), m in risks.items()]
     write_csv("fig4_c_sweep.csv", "C,eps2,risk_task1,risk_task3", rows)
-    return risks, float(np.mean(per_iter))
+    return risks, it_s
 
 
 def main(fast=False):

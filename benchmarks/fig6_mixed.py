@@ -8,12 +8,15 @@ variables with their DTSVM neighbors.
 Claims (Table I): per-node Task-2 risks drop from ~38% (all-DSVM) to ~15%
 (mixed), INCLUDING at the DSVM-only nodes 4-6 — knowledge reaches them
 through the node-consensus constraints alone.
+
+The all-DSVM and mixed variants batch into one per-seed ``sweep_fit``
+(active/couple masks are per-config sweep leaves).
 """
 import argparse
 
 import numpy as np
 
-from common import emit, run_dsvm, run_dtsvm, write_csv
+from common import dsvm_overrides, emit, run_sweep, write_csv
 
 from repro.core import graph as graph_lib
 from repro.data import synthetic
@@ -44,18 +47,21 @@ def run(fast: bool = False):
             relatedness=0.93, noise=1.3, seed=seed)
         A = graph_lib.make_graph("random", V, degree=0.8, seed=seed)
 
+        # both network variants train on the SAME data — one 2-config
+        # batched sweep (per-config active/couple masks), bitwise equal
+        # to the two serial fits it replaces:
         # LEFT: everyone trains Task 2 with plain DSVM (no source task)
         active_l = np.ones((V, 2), np.float32)
         active_l[:, 1] = 0.0
-        st_l, hist_l, dt, _ = run_dsvm(data, A, iters, active=active_l)
-        left.append(hist_l[-1][:, 0])          # per-node task-2 risk
-
         # RIGHT: nodes 1-3 run DTSVM with the source task, 4-6 run DSVM
         active_r, couple_r = _mixed_masks(V)
-        st_r, hist_r, dt2, _ = run_dtsvm(data, A, iters, eps2=10.0,
-                                         active=active_r, couple=couple_r)
-        right.append(hist_r[-1][:, 0])
-        per_iter += [dt / iters, dt2 / iters]
+        cfgs = [dsvm_overrides(V, active=active_l),
+                dict(eps2=10.0, active=active_r, couple=couple_r)]
+        res, dt = run_sweep(data, A, cfgs, iters)
+        finals = res.final_risks()             # (2, V, T)
+        left.append(finals[0][:, 0])           # per-node task-2 risk
+        right.append(finals[1][:, 0])
+        per_iter.append(dt / (len(cfgs) * iters))
 
     left = np.stack(left)                       # (seeds, V)
     right = np.stack(right)

@@ -3,7 +3,10 @@
     from repro.api import CSVM, DSVM, DTSVM, OnlineSession, SolverConfig
 
 - ``solvers``: one fit/predict protocol over CSVM / DSVM / DTSVM
-- ``backends``: execution-strategy registry ("vmap", "shard_map")
+- ``sweep``: ``sweep_fit`` — a whole hyper-parameter grid (Figs. 3-6)
+  as ONE batched fit, bitwise identical to the serial loop
+- ``backends``: execution-strategy registry ("vmap", "shard_map"),
+  for single fits and for batched sweeps
 - ``session``: OnlineSession for online task enter/leave (Fig. 7),
   incrementally re-planned via ``repro.engine``
 - ``evaluate``: shared risk-curve / residual evaluation
@@ -19,8 +22,9 @@ bookkeeping.  See API.md for the full tour.
 from repro.api import backends, evaluate
 from repro.api.session import OnlineSession
 from repro.api.solvers import CSVM, DSVM, DTSVM, Solver, SolverConfig
+from repro.api.sweep import SweepResult, dsvm_overrides, sweep_fit
 
 __all__ = [
     "CSVM", "DSVM", "DTSVM", "OnlineSession", "Solver", "SolverConfig",
-    "backends", "evaluate",
+    "SweepResult", "backends", "dsvm_overrides", "evaluate", "sweep_fit",
 ]

@@ -108,3 +108,55 @@ def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",
     """Dispatch one fit through the named backend."""
     return get(backend)(prob, iters, qp_iters=qp_iters, qp_solver=qp_solver,
                         state=state, eval_fn=eval_fn, **options)
+
+
+# -- batched sweeps ---------------------------------------------------------
+_SWEEP_REGISTRY: Dict[str, Callable] = {}
+
+
+def register_sweep(name: str):
+    """Register a sweep runner: ``run(plan, iters, *, state, eval_fn,
+    chain, **options) -> (states, history | None)`` over a prebuilt
+    ``repro.engine.SweepPlan`` (decorator)."""
+    def deco(fn: Callable) -> Callable:
+        _SWEEP_REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+@register_sweep("vmap")
+def _run_sweep_vmap(plan, iters: int, *, state=None, eval_fn=None,
+                    chain: bool = False, **_ignored):
+    if chain:
+        return plan.run_chain(state=state, iters=iters, eval_fn=eval_fn)
+    return plan.run(state=state, iters=iters, eval_fn=eval_fn)
+
+
+@register_sweep("shard_map")
+def _run_sweep_shard_map(plan, iters: int, *, state=None, eval_fn=None,
+                         chain: bool = False, mesh=None,
+                         sweep_axis: str = "sweep", node_axis=None,
+                         topology: str = "graph"):
+    if chain:
+        raise ValueError("warm-start chains are sequential in the config "
+                         "axis — use backend='vmap' for chain=True")
+    if eval_fn is not None:
+        raise ValueError("per-iteration histories are a single-host "
+                         "feature; run the sharded sweep without "
+                         "X_test/eval_fn and evaluate the final states")
+    st = plan.run_sharded(iters, mesh=mesh, sweep_axis=sweep_axis,
+                          node_axis=node_axis, topology=topology,
+                          state=state)
+    return st, None
+
+
+def run_sweep(plan, iters: int, *, backend: str = "vmap", state=None,
+              eval_fn=None, chain: bool = False, **options):
+    """Dispatch one batched sweep through the named sweep backend."""
+    try:
+        fn = _SWEEP_REGISTRY[backend]
+    except KeyError:
+        raise ValueError(f"unknown sweep backend {backend!r}; available: "
+                         f"{sorted(_SWEEP_REGISTRY)}") from None
+    return fn(plan, iters, state=state, eval_fn=eval_fn, chain=chain,
+              **options)

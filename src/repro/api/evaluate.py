@@ -44,8 +44,12 @@ def risk_eval_fn(V: int, X_test, y_test) -> Callable:
 
 
 def risks_of_state(state: core.DTSVMState, X_test, y_test) -> jnp.ndarray:
-    """(V, T) per-node risks of a fitted state on the shared test set."""
-    V = state.r.shape[0]
+    """(V, T) per-node risks of a fitted state on the shared test set.
+
+    Also accepts sweep-stacked states (leaves (S, V, T, ...), e.g. a
+    ``SweepResult``'s): any leading axes before (V, T) broadcast through,
+    returning (S, V, T)."""
+    V = state.r.shape[-3]
     Xte, yte = broadcast_test_set(X_test, y_test, V)
     return core.risks(state.r, Xte, yte)
 

@@ -15,6 +15,10 @@ Data layout is the repo-wide convention: X (V, T, N, p), y/mask (V, T, N)
 in {-1,+1}/{0,1}, test sets (T, n, p) shared across nodes.  The solvers
 wrap — never replace — the math in ``repro.core``; everything here is
 plumbing, bookkeeping and defaults.
+
+Looping ``fit()`` over a hyper-parameter GRID re-traces and re-compiles
+every point — use ``repro.api.sweep_fit`` instead: the whole grid runs
+as one batched plan, bitwise identical per config (``repro.api.sweep``).
 """
 from __future__ import annotations
 

@@ -22,15 +22,22 @@ from repro.core import dtsvm as core
 _EPS1_INF = 1e9
 
 
+def dsvm_problem_fields(V: int) -> dict:
+    """The DTSVMProblem overrides that specialize Prop. 1 to Forero's
+    DSVM — THE single definition of the baseline, shared by
+    ``make_dsvm_problem`` and ``repro.api.dsvm_overrides`` (which feeds
+    the same fields to the sweep engine as a config)."""
+    return dict(eps1=_EPS1_INF, eta1=0.0, box_scale=float(V),
+                couple=jnp.zeros((V,), jnp.float32))
+
+
 def make_dsvm_problem(X, y, mask=None, adj=None, *, C=0.01, eps2=1.0,
                       eta2=1.0, active=None) -> core.DTSVMProblem:
     """X: (V, T, N, p) — each task is trained independently (per-task DSVM),
     which is exactly how the paper's figures use the baseline."""
-    V, T = X.shape[0], X.shape[1]
-    return core.make_problem(
-        X, y, mask, adj, C=C, eps1=_EPS1_INF, eps2=eps2, eta1=0.0,
-        eta2=eta2, box_scale=float(V), active=active,
-        couple=jnp.zeros((V,), jnp.float32))
+    V = X.shape[0]
+    return core.make_problem(X, y, mask, adj, C=C, eps2=eps2, eta2=eta2,
+                             active=active, **dsvm_problem_fields(V))
 
 
 def run_dsvm(prob: core.DTSVMProblem, iters: int, qp_iters: int = 200,

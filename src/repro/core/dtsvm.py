@@ -68,12 +68,14 @@ class DTSVMProblem(NamedTuple):
     y: jnp.ndarray        # (V, T, N)  in {-1, +1}
     mask: jnp.ndarray     # (V, T, N)  in {0, 1}
     adj: jnp.ndarray      # (V, V) bool
-    C: float
-    eps1: float
-    eps2: float
-    eta1: float
-    eta2: float
-    box_scale: float      # the paper's V*T multiplier on C
+    C: jnp.ndarray        # () float32 — scalar hyper-parameters are
+    eps1: jnp.ndarray     # () stored as 0-d arrays, NOT Python floats:
+    eps2: jnp.ndarray     # a Python float closed over a lax.scan embeds
+    eta1: jnp.ndarray     # as an HLO literal while the sweep engine's
+    eta2: jnp.ndarray     # per-config slices are loop operands, and XLA
+    box_scale: jnp.ndarray  # compiles the two differently (ULP drift).
+    # box_scale: the paper's V*T multiplier on C.  (In a SweepPlan these
+    # six leaves carry a leading (S,) config axis instead.)
     active: jnp.ndarray   # (V, T)
     couple: jnp.ndarray   # (V,)
 
@@ -94,9 +96,10 @@ def make_problem(X, y, mask=None, adj=None, *, C=0.01, eps1=1.0, eps2=1.0,
         couple = jnp.ones((V,), jnp.float32)
     if box_scale is None:
         box_scale = float(V * T)
+    f32 = lambda v: jnp.asarray(float(v), jnp.float32)
     return DTSVMProblem(X, y, jnp.asarray(mask, jnp.float32),
-                        jnp.asarray(adj), float(C), float(eps1), float(eps2),
-                        float(eta1), float(eta2), float(box_scale),
+                        jnp.asarray(adj), f32(C), f32(eps1), f32(eps2),
+                        f32(eta1), f32(eta2), f32(box_scale),
                         jnp.asarray(active, jnp.float32),
                         jnp.asarray(couple, jnp.float32))
 
@@ -178,7 +181,9 @@ def _qp_inputs(prob: DTSVMProblem, u, f):
     a = 1.0 / u[..., : p + 1] + 1.0 / u[..., p + 1:]        # (V,T,p+1)
     K = kops.weighted_gram(Z, a)                            # (V,T,N,N)
     g = f[..., : p + 1] / u[..., : p + 1] + f[..., p + 1:] / u[..., p + 1:]
-    q = prob.mask + jnp.einsum("vtnd,vtd->vtn", Z, g)
+    # mul+reduce (not einsum) to stay bitwise-identical to the batched
+    # sweep path, whose vmapped dot_general would reassociate differently
+    q = prob.mask + jnp.sum(Z * g[..., None, :], axis=-1)
     hi = prob.box_scale * prob.C * prob.mask * prob.active[..., None]
     return Z, K, q, hi
 

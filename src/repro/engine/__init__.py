@@ -5,22 +5,35 @@
     state, hist = plan.run(state, iters, eval_fn)
 
 plus the pluggable QP engine registry (``qp_engines``: "fista" | "pg" |
-"pallas_fused") and the incremental ``Plan.replan`` used by the online
-Session.  See ``engine.plan`` for the full story.
+"pallas_fused"), the incremental ``Plan.replan`` used by the online
+Session, and the batched sweep compiler (``engine.sweep``):
+
+    splan = compile_sweep(prob, cfgs)      # S configs, ONE shared Z build
+    states, hist = splan.run(iters=60)     # the whole grid, one vmapped scan
+
+See ``engine.plan`` / ``engine.sweep`` for the full story.
 """
-from repro.engine import qp_engines
+from repro.engine import qp_engines, sweep
 from repro.engine.invariants import (PlanInvariants, compute_invariants,
-                                     update_invariants)
+                                     compute_z, update_invariants)
 from repro.engine.plan import DEFAULT_QP_SOLVER, Plan, compile_problem, \
     plan_step
+from repro.engine.sweep import SweepPlan, compile_sweep, make_sweep_mesh, \
+    per_config_problems
 
 __all__ = [
     "DEFAULT_QP_SOLVER",
     "Plan",
     "PlanInvariants",
+    "SweepPlan",
     "compile_problem",
+    "compile_sweep",
     "compute_invariants",
+    "compute_z",
+    "make_sweep_mesh",
+    "per_config_problems",
     "plan_step",
     "qp_engines",
+    "sweep",
     "update_invariants",
 ]

@@ -54,14 +54,31 @@ def _masks_part(prob: core.DTSVMProblem,
     return ntp, nbr, u, a, hi
 
 
-def compute_invariants(prob: core.DTSVMProblem, *,
-                       nbr_counts: Optional[jnp.ndarray] = None
-                       ) -> PlanInvariants:
-    """All loop-invariants of Prop. 1, from scratch.  Pure jnp."""
+def compute_z(prob: core.DTSVMProblem) -> jnp.ndarray:
+    """The label-signed augmented data Z = Y [X, 1] (mask-zeroed).
+
+    Z is the SHARED half of the invariant split: it depends only on the
+    data (X, y, mask), never on hyper-parameters or membership masks, so
+    a hyper-parameter sweep (``engine.sweep``) builds it once and shares
+    it across every config; only ``_masks_part`` + the Gram re-weighting
+    vary per config.
+    """
     V, T, N, p = prob.X.shape
-    ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
     Xa = jnp.concatenate([prob.X, jnp.ones((V, T, N, 1), jnp.float32)], -1)
-    Z = prob.y[..., None] * Xa * prob.mask[..., None]
+    return prob.y[..., None] * Xa * prob.mask[..., None]
+
+
+def compute_invariants(prob: core.DTSVMProblem, *,
+                       nbr_counts: Optional[jnp.ndarray] = None,
+                       Z: Optional[jnp.ndarray] = None) -> PlanInvariants:
+    """All loop-invariants of Prop. 1, from scratch.  Pure jnp.
+
+    ``Z`` may be passed in when the caller already holds it (the sweep
+    compiler shares one Z across its whole config axis).
+    """
+    ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
+    if Z is None:
+        Z = compute_z(prob)
     K = kops.weighted_gram(Z, a)
     L = qp_lib.gershgorin_lipschitz(K)
     return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi, L=L)

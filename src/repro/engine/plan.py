@@ -52,7 +52,9 @@ def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
 
     f = core._f_vec(prob, state, ntp, nbr, nbr_reduce)
     g = f[..., : p + 1] / u[..., : p + 1] + f[..., p + 1:] / u[..., p + 1:]
-    q = prob.mask + jnp.einsum("vtnd,vtd->vtn", Z, g)
+    # mul+reduce (not einsum): bitwise-stable under an extra vmapped
+    # config axis — the sweep engine relies on batched == serial exactly
+    q = prob.mask + jnp.sum(Z * g[..., None, :], axis=-1)
 
     lam = qp_engines.get(qp_solver)(inv.K, q, inv.hi, state.lam,
                                     iters=qp_iters, L=inv.L)   # eq. (6)

@@ -41,7 +41,15 @@ def _interpret() -> bool:
 
 
 def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
-    """K = Z diag(a) Z^T over arbitrary leading batch dims."""
+    """K = Z diag(a) Z^T over arbitrary leading batch dims.
+
+    ``a`` may carry MORE leading dims than ``Z`` (the sweep engine's
+    shared-Z case: one (V,T,N,D) data tensor re-weighted by an
+    (S,V,T,D) stack of per-config diagonals) — Z is broadcast up to
+    ``a``'s batch."""
+    extra = (a.ndim - 1) - (Z.ndim - 2)
+    if extra > 0:
+        Z = jnp.broadcast_to(Z, a.shape[:-1] + Z.shape[-2:])
     if not _use_pallas():
         return ref.weighted_gram(Z, a)
     fn = lambda z2, a1: gram_kernel.weighted_gram_2d(
@@ -58,14 +66,18 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
 def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:
     """Fused projected-gradient step over arbitrary leading batch dims.
 
-    ``gamma`` may be a scalar or a per-problem (...,) step-size array
-    matching the batch dims (1/L per (v,t) sub-problem)."""
+    ``gamma`` may be a scalar or a per-problem step-size array over a
+    PREFIX of the batch dims (1/L per (v,t) sub-problem, or per config
+    in a sweep: an (S,) or (S,V,T) gamma against an (S,V,T,N) lam) —
+    leading-aligned, then broadcast across the remaining batch dims."""
     if not _use_pallas():
         return ref.qp_pg_step(lam, K, q, hi, gamma)
     fn = lambda l1, K2, q1, h1, g0: qp_kernel.qp_pg_step_1d(
         l1, K2, q1, h1, g0, interpret=_interpret())
     batch = lam.shape[:-1]
     gamma = jnp.asarray(gamma, jnp.float32)
+    if gamma.ndim and gamma.ndim < len(batch):      # leading-align
+        gamma = gamma.reshape(gamma.shape + (1,) * (len(batch) - gamma.ndim))
     if batch:
         flat = lambda x, nd: x.reshape((-1,) + x.shape[len(batch):])
         gamma_b = flat(jnp.broadcast_to(gamma, batch), 0)

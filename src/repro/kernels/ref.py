@@ -20,11 +20,12 @@ def qp_pg_step(lam: jnp.ndarray, K: jnp.ndarray, q: jnp.ndarray,
         lam <- clip(lam + gamma * (q - K lam), 0, hi)
 
     lam/q/hi: (..., N), K: (..., N, N).  ``gamma`` is a scalar or a
-    per-problem (...,) array of step sizes (the engine supplies 1/L per
-    (v,t) sub-problem).
+    per-problem array of step sizes over a PREFIX of the batch dims
+    (the engine supplies 1/L per (v,t) sub-problem; a sweep may supply
+    (S,) or (S,V,T) against an (S,V,T,N) lam) — leading-aligned.
     """
     gamma = jnp.asarray(gamma, lam.dtype)
     if gamma.ndim:
-        gamma = gamma[..., None]
+        gamma = gamma.reshape(gamma.shape + (1,) * (lam.ndim - gamma.ndim))
     grad = q - jnp.einsum("...nm,...m->...n", K, lam)
     return jnp.clip(lam + gamma * grad, 0.0, hi)

@@ -1,0 +1,111 @@
+"""Golden-figure regression tests.
+
+The unit suites prove the engine's execution paths agree with EACH OTHER
+(bitwise plan-vs-legacy, sweep-vs-serial, ...), which cannot catch a
+change that silently shifts what ALL paths compute — a reweighted
+contraction, a reordered reduction, a data-generator tweak.  These tests
+pin the figures themselves: tiny-regime fig2/fig3 risk outputs, produced
+by the SAME benchmark runner functions the real figures use, are
+committed as JSON fixtures under ``tests/golden/`` and asserted to
+tolerance (loose enough for cross-platform / cross-jax-version ULP
+jitter, tight enough that a >1.5 pp risk shift fails).
+
+Regenerate after an INTENTIONAL numeric change (and say so in the PR):
+
+    PYTHONPATH=src python tests/test_golden_figures.py --regen
+"""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "benchmarks"))
+
+GOLDEN_DIR = os.path.join(_HERE, "golden")
+ATOL = 0.015
+
+# Tiny regimes: same code paths as the paper figures, seconds not minutes
+FIG2_REGIME = dict(V=6, deg=0.8, n_tgt=40, n_src=200, seeds=(0,),
+                   iters=12, n_test=300)
+FIG3_REGIME = dict(eps_grid=(0.1, 10.0), seeds=(0,), iters=10, V=6,
+                   n_per_task=(24, 120), degree=0.8, qp_iters=60)
+
+
+def _fig2_outputs():
+    import fig2_convergence
+    r = dict(FIG2_REGIME)
+    h_t, h_d, csv_r, _ = fig2_convergence.curves_for(
+        r.pop("V"), r.pop("deg"), r.pop("n_tgt"), r.pop("seeds"),
+        r.pop("iters"), n_src=r.pop("n_src"), n_test=r.pop("n_test"), **r)
+    return {"dtsvm_curve": np.asarray(h_t).tolist(),
+            "dsvm_curve": np.asarray(h_d).tolist(),
+            "csvm": np.asarray(csv_r).tolist()}
+
+
+def _fig3_outputs():
+    import fig3_eps_sweep
+    r = dict(FIG3_REGIME)
+    risks, csvm_m, _ = fig3_eps_sweep.sweep_grid(
+        r.pop("eps_grid"), r.pop("seeds"), r.pop("iters"), **r)
+    return {"grid": [[e1, e2, *np.asarray(m).tolist()]
+                     for (e1, e2), m in risks.items()],
+            "csvm": np.asarray(csvm_m).tolist()}
+
+
+_FIGS = {"fig2": (_fig2_outputs, FIG2_REGIME),
+         "fig3": (_fig3_outputs, FIG3_REGIME)}
+
+
+def _load(name):
+    path = os.path.join(GOLDEN_DIR, f"{name}.json")
+    if not os.path.exists(path):
+        pytest.fail(f"missing golden fixture {path}; regenerate with "
+                    f"`python tests/test_golden_figures.py --regen`")
+    with open(path) as f:
+        return json.load(f)
+
+
+def _assert_matches(got: dict, want: dict, name: str):
+    assert set(got) == set(want["outputs"]), \
+        f"{name}: fixture keys changed — regenerate intentionally"
+    for key, val in want["outputs"].items():
+        np.testing.assert_allclose(
+            np.asarray(got[key], np.float64),
+            np.asarray(val, np.float64), atol=ATOL,
+            err_msg=f"{name}/{key} drifted beyond atol={ATOL}; if the "
+                    f"numeric change is intentional, regenerate the "
+                    f"fixture and call it out in the PR")
+
+
+@pytest.mark.golden
+@pytest.mark.parametrize("name", sorted(_FIGS))
+def test_golden_figure(name):
+    fn, regime = _FIGS[name]
+    want = _load(name)
+    assert want["regime"] == {k: list(v) if isinstance(v, tuple) else v
+                              for k, v in regime.items()}, \
+        f"{name}: regime changed — regenerate the fixture"
+    _assert_matches(fn(), want, name)
+
+
+def regen():
+    os.makedirs(GOLDEN_DIR, exist_ok=True)
+    for name, (fn, regime) in _FIGS.items():
+        rec = {"regime": {k: list(v) if isinstance(v, tuple) else v
+                          for k, v in regime.items()},
+               "outputs": fn()}
+        path = os.path.join(GOLDEN_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+            f.write("\n")
+        print("wrote", path)
+
+
+if __name__ == "__main__":
+    if "--regen" in sys.argv:
+        regen()
+    else:
+        print(__doc__)
