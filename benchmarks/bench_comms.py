@@ -1,0 +1,154 @@
+"""Communication benchmark: risk vs bytes, risk vs staleness.
+
+The paper's efficiency claim — nodes exchange ONLY tiny decision
+variables — made quantitative over the fabric (``repro.net``).  One
+fig2-regime problem (scarce target + rich source task), then:
+
+- ``identity``          the lossless/zero-delay fabric, asserted BITWISE
+                        identical to the vmap backend (the subsystem's
+                        contract) and metered: the float32 byte bill.
+- ``risk_vs_bytes``     int8/int16/float16 wire formats: final risks vs
+                        the float32 baseline against bytes/round.  The
+                        acceptance bar: at least one <=16-bit format
+                        stays within 1e-3 of baseline final risks.
+- ``risk_vs_staleness`` delays, drop probabilities, partial-activation
+                        and gossip schedules: how much staleness the
+                        consensus tolerates (cf. arXiv:1609.09563).
+
+Outputs ``BENCH_comms.json`` (repo root on a full run, ``--out PATH``
+anywhere — the CI net lane uploads the fast variant as an artifact) and
+the ``run.py`` CSV contract on stdout.
+"""
+import argparse
+import json
+import os
+
+import jax
+import numpy as np
+
+from common import build, emit
+
+from repro.api import DTSVM, LinkPolicy, NetConfig, SolverConfig
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _fit(data, A, cfg):
+    solver = DTSVM(cfg)
+    solver.fit(data["X"], data["y"], mask=data["mask"], adj=A)
+    risks = np.asarray(solver.risks(data["X_test"], data["y_test"]))
+    return solver, risks
+
+
+def _net_record(name, net, data, A, cfg, base_risks):
+    solver, risks = _fit(data, A, cfg.replace(net=net))
+    rep = solver.net_report_
+    return {
+        "name": name,
+        "final_risks_mean": [float(r) for r in risks.mean(0)],
+        "max_abs_risk_delta_vs_float32": float(
+            np.abs(risks - base_risks).max()),
+        "bytes_per_round": rep["bytes_per_round"],
+        "bytes_sent": rep["bytes_sent"],
+        "msgs_sent": rep["msgs_sent"],
+        "delivery_rate": rep["delivery_rate"],
+        "mode": rep["mode"],
+    }
+
+
+def run(fast: bool = False, out: str = None):
+    V = 6
+    iters = 20 if fast else 60
+    qp_iters = 60 if fast else 100
+    n_test = 600 if fast else 1800
+    data, A = build(V, [40, 200], degree=0.8, seed=0, n_test=n_test)
+    cfg = SolverConfig(C=0.01, eps2=1.0, iters=iters, qp_iters=qp_iters)
+
+    # -- identity: the fabric's contract, plus the float32 byte bill ----
+    ref, base_risks = _fit(data, A, cfg)                 # plain vmap
+    idn, idn_risks = _fit(data, A, cfg.replace(net=NetConfig()))
+    bitwise = all(
+        bool(np.array_equal(np.asarray(a), np.asarray(b)))
+        for a, b in zip(jax.tree.leaves(ref.state_),
+                        jax.tree.leaves(idn.state_)))
+    assert bitwise, "identity fabric drifted from the vmap backend"
+    rep0 = idn.net_report_
+
+    # -- risk vs bytes: the wire format axis ----------------------------
+    quant = [_net_record(q, NetConfig(policy=LinkPolicy(quant=q)),
+                         data, A, cfg, base_risks)
+             for q in ("float16", "int16", "int8")]
+
+    # -- risk vs staleness: delay / loss / activation axes --------------
+    staleness = []
+    for d in (1, 2, 4):
+        staleness.append(_net_record(
+            f"delay={d}", NetConfig(policy=LinkPolicy(delay=d)),
+            data, A, cfg, base_risks))
+    for p in (0.1, 0.3, 0.5):
+        staleness.append(_net_record(
+            f"drop={p}", NetConfig(policy=LinkPolicy(drop=p), seed=1),
+            data, A, cfg, base_risks))
+    for spec in ("partial:0.75", "partial:0.5", "gossip"):
+        staleness.append(_net_record(
+            spec, NetConfig(schedule=spec, seed=1),
+            data, A, cfg, base_risks))
+
+    low_bit_ok = [r["name"] for r in quant
+                  if r["name"] in ("int16", "int8", "float16")
+                  and r["max_abs_risk_delta_vs_float32"] <= 1e-3]
+    recs = {
+        "config": {"V": V, "T": 2, "n_train_per_task": [40, 200],
+                   "iters": iters, "qp_iters": qp_iters,
+                   "n_test": n_test, "payload_dim": rep0["payload_dim"],
+                   "edges": rep0["edges"],
+                   "backend": jax.default_backend()},
+        "identity": {
+            "bitwise_identical_to_vmap": bitwise,
+            "final_risks_mean": [float(r) for r in idn_risks.mean(0)],
+            "bytes_per_round": rep0["bytes_per_round"],
+            "bytes_sent": rep0["bytes_sent"],
+            "msgs_sent": rep0["msgs_sent"],
+        },
+        "risk_vs_bytes": quant,
+        "risk_vs_staleness": staleness,
+        "acceptance": {
+            "identity_bitwise": bitwise,
+            "low_bit_configs_within_1e-3": low_bit_ok,
+        },
+    }
+    assert low_bit_ok, ("no <=16-bit wire format stayed within 1e-3 of "
+                        "the float32 final risks")
+    if out is not None:
+        path = out
+    elif not fast:
+        # fast mode is a smoke config — don't clobber the committed
+        # full-regime record unless --out says so explicitly
+        path = os.path.join(ROOT, "BENCH_comms.json")
+    else:
+        path = None
+    if path:
+        with open(path, "w") as f:
+            json.dump(recs, f, indent=2)
+            f.write("\n")
+    return recs
+
+
+def main(fast=False, out=None):
+    recs = run(fast, out)
+    q16 = next(r for r in recs["risk_vs_bytes"] if r["name"] == "int16")
+    emit("bench_comms", recs["identity"]["bytes_per_round"],
+         f"identity_bitwise={recs['identity']['bitwise_identical_to_vmap']} "
+         f"f32_B_round={recs['identity']['bytes_per_round']:.0f} "
+         f"int16_B_round={q16['bytes_per_round']:.0f} "
+         f"int16_risk_delta={q16['max_abs_risk_delta_vs_float32']:.1e} "
+         f"low_bit_ok={','.join(recs['acceptance']['low_bit_configs_within_1e-3'])}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="write BENCH_comms.json to this path")
+    args = ap.parse_args()
+    main(args.fast, args.out)

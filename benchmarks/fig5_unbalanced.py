@@ -17,13 +17,14 @@ from common import build, dsvm_overrides, emit, run_csvm_per_task, \
     run_sweep, write_csv
 
 
-def run(fast: bool = False):
-    seeds = range(3 if fast else 15)
-    iters = 30 if fast else 60
-    pos_fracs = [2 / 12, 4 / 12, 6 / 12]
-    rows, per_iter = [], []
+def scenario_risks(pos_fracs, seeds, iters, *, V=4, n_per_task=(12, 200),
+                   n_test=1800, csvm_qp_iters=600):
+    """Target-task risks per imbalance scenario: {pos_frac: (dtsvm,
+    dsvm, csvm)} plus the mean per-iteration wall time.  The tiny-regime
+    golden fixture (tests/test_golden_figures.py) calls this with the
+    SAME code path the figure uses, just smaller."""
+    per_iter = []
     out = {}
-    V = 4
     # DTSVM and the DSVM baseline train on the SAME data per scenario —
     # one 2-config batched sweep replaces the two serial fits (bitwise)
     cfgs = [dict(), dsvm_overrides(V)]
@@ -32,19 +33,27 @@ def run(fast: bool = False):
         for seed in seeds:
             pos = np.full((V, 2), 0.5)
             pos[:, 0] = pf          # unbalanced target labels
-            data, A = build(V, [12, 200], graph_kind="full", seed=seed,
-                            pos_frac=pos)
+            data, A = build(V, list(n_per_task), graph_kind="full",
+                            seed=seed, pos_frac=pos, n_test=n_test)
             res, dt = run_sweep(data, A, cfgs, iters)
             finals = res.final_risks()              # (2, V, T)
             accs_t.append(finals[0].mean(0)[0])
             accs_d.append(finals[1].mean(0)[0])
-            accs_c.append(run_csvm_per_task(data)[0])
+            accs_c.append(run_csvm_per_task(data, qp_iters=csvm_qp_iters)[0])
             per_iter.append(dt / (len(cfgs) * iters))
-        out[pf] = (np.mean(accs_t), np.mean(accs_d), np.mean(accs_c))
-        rows.append([pf, *out[pf]])
-    write_csv("fig5_unbalanced.csv",
-              "pos_frac_task1,dtsvm_risk,dsvm_risk,csvm_risk", rows)
+        out[pf] = (float(np.mean(accs_t)), float(np.mean(accs_d)),
+                   float(np.mean(accs_c)))
     return out, float(np.mean(per_iter))
+
+
+def run(fast: bool = False):
+    seeds = range(3 if fast else 15)
+    iters = 30 if fast else 60
+    out, it_s = scenario_risks([2 / 12, 4 / 12, 6 / 12], seeds, iters)
+    write_csv("fig5_unbalanced.csv",
+              "pos_frac_task1,dtsvm_risk,dsvm_risk,csvm_risk",
+              [[pf, *vals] for pf, vals in out.items()])
+    return out, it_s
 
 
 def main(fast=False):

@@ -33,17 +33,19 @@ def _mixed_masks(V=6, src_nodes=(0, 1, 2)):
     return active, couple
 
 
-def run(fast: bool = False):
-    seeds = range(4 if fast else 20)
-    iters = 40 if fast else 80
-    V = 6
+def mixed_network_risks(seeds, iters, *, V=6, n_tgt=4, n_src=200,
+                        n_test=1800, src_nodes=(0, 1, 2)):
+    """Per-node target-task risks of the all-DSVM vs mixed network:
+    (left, right) (seeds, V) arrays plus mean per-iteration wall time.
+    The tiny-regime golden fixture calls this with the SAME code path
+    the figure uses, just smaller."""
     left, right, per_iter = [], [], []
     for seed in seeds:
         n_train = np.zeros((V, 2), int)
-        n_train[:, 0] = 4                      # scarce target everywhere
-        n_train[:3, 1] = 200                   # source only at nodes 1-3
+        n_train[:, 0] = n_tgt                  # scarce target everywhere
+        n_train[list(src_nodes), 1] = n_src    # source only at nodes 1-3
         data = synthetic.make_multitask_data(
-            V=V, T=2, p=10, n_train=n_train, n_test=1800,
+            V=V, T=2, p=10, n_train=n_train, n_test=n_test,
             relatedness=0.93, noise=1.3, seed=seed)
         A = graph_lib.make_graph("random", V, degree=0.8, seed=seed)
 
@@ -54,7 +56,7 @@ def run(fast: bool = False):
         active_l = np.ones((V, 2), np.float32)
         active_l[:, 1] = 0.0
         # RIGHT: nodes 1-3 run DTSVM with the source task, 4-6 run DSVM
-        active_r, couple_r = _mixed_masks(V)
+        active_r, couple_r = _mixed_masks(V, src_nodes)
         cfgs = [dsvm_overrides(V, active=active_l),
                 dict(eps2=10.0, active=active_r, couple=couple_r)]
         res, dt = run_sweep(data, A, cfgs, iters)
@@ -62,9 +64,14 @@ def run(fast: bool = False):
         left.append(finals[0][:, 0])           # per-node task-2 risk
         right.append(finals[1][:, 0])
         per_iter.append(dt / (len(cfgs) * iters))
+    return np.stack(left), np.stack(right), float(np.mean(per_iter))
 
-    left = np.stack(left)                       # (seeds, V)
-    right = np.stack(right)
+
+def run(fast: bool = False):
+    seeds = range(4 if fast else 20)
+    iters = 40 if fast else 80
+    V = 6
+    left, right, per_iter = mixed_network_risks(seeds, iters, V=V)
     rows = []
     for v in range(V):
         rows.append([v + 1, left[:, v].mean(), left[:, v].std(),
@@ -74,7 +81,7 @@ def run(fast: bool = False):
     write_csv("fig6_table1_mixed.csv",
               "node,left_dsvm_mean,left_std,right_mixed_mean,right_std",
               rows)
-    return left, right, float(np.mean(per_iter))
+    return left, right, per_iter
 
 
 def main(fast=False):

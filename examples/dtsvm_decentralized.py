@@ -3,13 +3,22 @@ if "XLA_FLAGS" not in os.environ:
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 # ^ 8 placeholder devices = 8 network nodes, set before jax initializes.
 
-"""Decentralized DTSVM: one device per network node, via the backend registry.
+"""Decentralized DTSVM on REAL links: the async fabric vs the ideal network.
 
-The SAME ``DTSVM.fit`` runs single-host (backend="vmap") or SPMD with one
-device per node (backend="shard_map"); neighbor exchange becomes
-collective_permute (ring) or adjacency-masked all_gather (random graph) —
-the TPU mapping of the paper's message passing (DESIGN.md §3).  The result
-is bit-identical to the single-host reference, which this example checks.
+Three executions of the SAME ``DTSVM.fit`` over one 8-node problem:
+
+1. ``backend="vmap"``       the single-host reference.
+2. ``backend="async"`` with the identity ``NetConfig`` — the fabric in
+   lossless/zero-delay mode, checked BITWISE identical to (1), with the
+   float32 byte bill metered (what "only tiny decision variables cross
+   the network" costs).
+3. The lossy scenario: int16 wire, 15% in-transit loss, link
+   availability re-drawn every round (``schedule="links:random"``) —
+   consensus over stale mailboxes, at a fraction of the bytes.
+
+A fourth run keeps the PR-1 story: ``backend="shard_map"`` maps one
+device per node (neighbor sums as collectives) and stays bit-identical
+to the reference.
 
 Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
 
@@ -19,9 +28,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import DTSVM, SolverConfig
+from repro.api import DTSVM, LinkPolicy, NetConfig, SolverConfig
 from repro.core import graph
 from repro.data import synthetic
+
+
+def _max_err(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree.leaves(a.state_), jax.tree.leaves(b.state_)))
 
 
 def main():
@@ -31,22 +45,33 @@ def main():
     n_train[:, 1] = 60
     data = synthetic.make_multitask_data(V=V, T=T, p=10, n_train=n_train,
                                          n_test=600, relatedness=0.9, seed=0)
+    adj = graph.make_graph("random", V, 0.7)
     cfg = SolverConfig(C=0.01, iters=25, qp_iters=80)
+    fit = lambda c: DTSVM(c).fit(data["X"], data["y"], mask=data["mask"],
+                                 adj=adj)
 
-    for topology, adj in [("ring", graph.ring(V)),
-                          ("graph", graph.make_graph("random", V, 0.7))]:
-        ref = DTSVM(cfg).fit(data["X"], data["y"], mask=data["mask"],
-                             adj=adj)
-        dist = DTSVM(cfg.replace(
-            backend="shard_map",
-            backend_options={"topology": topology})).fit(
-                data["X"], data["y"], mask=data["mask"], adj=adj)
-        err = max(float(jnp.max(jnp.abs(a - b))) for a, b in
-                  zip(jax.tree.leaves(ref.state_),
-                      jax.tree.leaves(dist.state_)))
-        risks = dist.global_risks(data["X_test"], data["y_test"])
-        print(f"{topology:6s}: {V} devices, risks={risks.round(3)}, "
-              f"|dist - single_host| = {err:.2e}")
+    ref = fit(cfg)
+    risks = ref.global_risks(data["X_test"], data["y_test"])
+    print(f"vmap reference:    risks={risks.round(3)}")
+
+    ideal = fit(cfg.replace(net=NetConfig()))
+    m = ideal.net_report_
+    print(f"identity fabric:   |async - vmap| = {_max_err(ideal, ref):.2e} "
+          f"(bitwise), {m['bytes_per_round']:.0f} B/round float32")
+
+    lossy = fit(cfg.replace(net=NetConfig(
+        policy=LinkPolicy(quant="int16", drop=0.15),
+        schedule="links:random:0.5", seed=0)))
+    risks_l = lossy.global_risks(data["X_test"], data["y_test"])
+    m = lossy.net_report_
+    print(f"lossy fabric:      risks={risks_l.round(3)} "
+          f"(int16 wire, 15% loss, time-varying links: "
+          f"{m['bytes_per_round']:.0f} B/round, "
+          f"{m['delivery_rate']:.0%} delivered)")
+
+    dist = fit(cfg.replace(backend="shard_map",
+                           backend_options={"topology": "graph"}))
+    print(f"shard_map 8 dev:   |dist - vmap| = {_max_err(dist, ref):.2e}")
 
 
 if __name__ == "__main__":

@@ -1,20 +1,29 @@
-"""Online transfer learning (paper Fig. 7) through ``repro.api.OnlineSession``:
-tasks enter and leave a live DTSVM network without restarting — the session
-carries the ADMM state across membership events; no problem rebuilding, no
-mask bookkeeping.
+"""Online transfer learning over a LOSSY network (paper Fig. 7 + repro.net).
+
+Tasks enter and leave a live DTSVM network whose links are real: every
+message is int8-quantized, 20% are lost in transit, and one link runs a
+round behind (``repro.net.LinkPolicy``).  The ``OnlineSession`` carries
+both the ADMM state AND the fabric state (mailboxes, delay rings, byte
+counters) across membership events — a joining task's mailboxes
+warm-fill from its neighbors' current variables, metered separately.
+
+The same script with ``NetConfig()`` (the identity fabric) reproduces
+the synchronous session bit for bit; run with ``--ideal`` to compare.
 
 Run (after ``pip install -e .``, or with ``PYTHONPATH=src``):
 
-    python examples/online_transfer.py
+    python examples/online_transfer.py [--ideal]
 """
+import argparse
+
 import numpy as np
 
-from repro.api import OnlineSession, SolverConfig
+from repro.api import LinkPolicy, NetConfig, OnlineSession, SolverConfig
 from repro.core import graph
 from repro.data import synthetic
 
 
-def main():
+def main(ideal: bool = False):
     V, T = 6, 3
     n_train = np.zeros((V, T), int)
     n_train[:, 0] = 10          # target task 1
@@ -24,17 +33,33 @@ def main():
         V=V, T=T, p=10, n_train=n_train, n_test=900, relatedness=0.9,
         seed=0)
 
+    if ideal:
+        net = NetConfig()       # perfect wires: bitwise the vmap session
+    else:
+        net = NetConfig(
+            policy=LinkPolicy(quant="int8", drop=0.2),
+            edge_policies={(0, 1): LinkPolicy(quant="int8", drop=0.2,
+                                              delay=1)},
+            seed=0)
     sess = OnlineSession(
         data["X"], data["y"], mask=data["mask"], adj=graph.full(V),
-        config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0, qp_iters=100),
+        config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0, qp_iters=100,
+                            net=net),
         X_test=data["X_test"], y_test=data["y_test"],
         couple=np.zeros(V, np.float32))
 
     def report(name):
         sess.run(30, record=False)
         r = sess.global_risks()
-        print(f"{name:36s} risks t1={r[0]:.3f} t2={r[1]:.3f} t3={r[2]:.3f}")
+        m = sess.net_report_
+        print(f"{name:36s} risks t1={r[0]:.3f} t2={r[1]:.3f} "
+              f"t3={r[2]:.3f}  [{m['bytes_sent']/1024:6.1f} KiB sent, "
+              f"{m['delivery_rate']:.0%} delivered, "
+              f"warmfill={m['warmfill_msgs']:.0f}]")
 
+    kind = ("identity" if ideal
+            else "int8 wire, 20% loss, one delayed link")
+    print(f"fabric: {kind}")
     report("stage1: all independent (DSVM)")
 
     sess.drop_task(1)                       # task 2 idles ...
@@ -42,9 +67,9 @@ def main():
     report("stage2: task1 joins task3 (DTSVM)")
 
     sess.drop_task(0)                       # task 1 leaves (state persists)
-    sess.add_task(1)
-    sess.set_coupling(False)
-    report("stage3: task1 leaves")
+    sess.add_task(1)                        # task 2 re-enters: its
+    sess.set_coupling(False)                # mailboxes warm-fill now
+    report("stage3: task1 leaves, task2 enters")
 
     sess.set_coupling(True)                 # task 2's turn to transfer
     report("stage4: task2 joins task3 (DTSVM)")
@@ -55,4 +80,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ideal", action="store_true",
+                    help="identity fabric (bitwise the synchronous run)")
+    main(ap.parse_args().ideal)

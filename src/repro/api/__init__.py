@@ -11,6 +11,11 @@
   incrementally re-planned via ``repro.engine``
 - ``evaluate``: shared risk-curve / residual evaluation
 
+``SolverConfig(net=NetConfig(...))`` routes any fit through the
+communication fabric (``repro.net``): lossy/delayed/quantized links,
+activation schedules, byte metering — ``NetConfig`` / ``LinkPolicy``
+are re-exported here for that entry point.
+
 Execution compiles through the plan/execute layer (``repro.engine``):
 loop-invariants once per fit, pluggable QP engines
 (``SolverConfig(qp_solver="fista" | "pg" | "pallas_fused")``).
@@ -23,8 +28,10 @@ from repro.api import backends, evaluate
 from repro.api.session import OnlineSession
 from repro.api.solvers import CSVM, DSVM, DTSVM, Solver, SolverConfig
 from repro.api.sweep import SweepResult, dsvm_overrides, sweep_fit
+from repro.net.policies import LinkPolicy, NetConfig
 
 __all__ = [
-    "CSVM", "DSVM", "DTSVM", "OnlineSession", "Solver", "SolverConfig",
-    "SweepResult", "backends", "dsvm_overrides", "evaluate", "sweep_fit",
+    "CSVM", "DSVM", "DTSVM", "LinkPolicy", "NetConfig", "OnlineSession",
+    "Solver", "SolverConfig", "SweepResult", "backends", "dsvm_overrides",
+    "evaluate", "sweep_fit",
 ]

@@ -18,8 +18,20 @@ compiled once per fit, then the light per-iteration body runs.
                    collectives (``repro.core.dtsvm_dist``), the plan
                    compiled per node inside the shard; accepts
                    ``topology="graph" | "ring"`` and an optional ``mesh``.
+- ``"async"``      the communication fabric (``repro.net``): the SAME
+                   compiled plan stepped against per-node mailboxes
+                   behind lossy/delayed/quantized links and activation
+                   schedules, with byte metering.  Accepts ``net=``
+                   (a ``repro.net.NetConfig``), a prebuilt ``plan=`` /
+                   ``fabric_state=`` / ``round0=`` (the online Session
+                   carries both across stages), and ``meter_out=`` — a
+                   dict the backend fills with the run's byte report and
+                   final fabric state (the ``(state, history)`` return
+                   contract leaves no slot for them).
 
-Both are numerically equivalent (tested); pick by config, not by import.
+All are numerically equivalent in their lossless configurations — the
+async backend's identity fabric is bitwise the vmap path (tested); pick
+by config, not by import.
 ``qp_solver`` selects the inner dual engine ("fista" | "pg" |
 "pallas_fused" — ``repro.engine.qp_engines``).
 """
@@ -30,6 +42,7 @@ from typing import Callable, Dict, Optional
 from repro.core import dtsvm as core
 from repro.core import dtsvm_dist
 from repro.engine import plan as engine_plan
+from repro.net import async_admm
 
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -100,6 +113,30 @@ def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
         hist.append(eval_fn(st))
     import jax.numpy as jnp
     return st, jnp.stack(hist)
+
+
+@register("async")
+def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
+               qp_solver: str = "fista",
+               state: Optional[core.DTSVMState] = None, eval_fn=None,
+               net=None, plan: Optional[engine_plan.Plan] = None,
+               fabric=None, fabric_state=None, round0: int = 0,
+               meter_out: Optional[dict] = None):
+    if plan is not None and (plan.prob is not prob
+                             or plan.qp_iters != qp_iters
+                             or plan.qp_solver != qp_solver):
+        raise ValueError(
+            "prebuilt plan= disagrees with the call: pass prob=plan.prob "
+            "and matching qp_iters/qp_solver (or omit plan=)")
+    res = async_admm.run_async(
+        prob, iters, net=net, plan=plan, fabric=fabric,
+        fabric_state=fabric_state, qp_iters=qp_iters, qp_solver=qp_solver,
+        state=state, eval_fn=eval_fn, round0=round0)
+    if meter_out is not None:
+        meter_out["report"] = res.report
+        meter_out["fabric"] = res.fabric
+        meter_out["fabric_state"] = res.fabric_state
+    return res.state, res.history
 
 
 def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",

@@ -32,6 +32,16 @@ the hand-rolled per-stage ``make_problem`` + ``run_dtsvm`` loop it
 replaces (tested).  ``jit=True`` additionally wraps each ``run`` in one
 ``jax.jit`` call — fastest across many short stages, numerically
 equivalent but not bitwise (XLA fuses differently inside jit).
+
+With a communication model (``SolverConfig(net=NetConfig(...))`` or
+``backend="async"``) the session becomes fabric-aware: mailboxes, delay
+rings and byte counters persist across ``run`` calls (one continuous
+message stream — drops are keyed on the absolute round), and every
+membership event warm-fills the affected tasks' mailboxes from the
+neighbors' current variables before the next round (the Fig.-7 join
+story), metered separately as ``warmfill_msgs``.  The identity
+NetConfig reproduces the vmap session bitwise, stage for stage
+(tested); ``net_report_`` holds the cumulative byte accounting.
 """
 from __future__ import annotations
 
@@ -43,7 +53,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import backends, evaluate
-from repro.api.solvers import SolverConfig, _as_solver_config
+from repro.api.solvers import SolverConfig, _as_solver_config, \
+    effective_backend
 from repro.core import dtsvm as core
 from repro.engine import plan as engine_plan
 
@@ -90,6 +101,16 @@ class OnlineSession:
         self.history = []            # one (iters, V, T) risk block per run()
         self._plan: Optional[engine_plan.Plan] = None
         self._masks_dirty = False    # membership changed since last plan
+        # fabric-aware (async backend) bookkeeping: live mailboxes/delay
+        # rings/counters and the absolute round of the message stream
+        self._net_fabric = None
+        self._net_state = None
+        self._net_series = []        # per-round bytes, across all stages
+        self.net_report_: Optional[dict] = None
+        if jit and self._effective_backend() == "async":
+            raise ValueError("jit=True is a vmap-session feature; the "
+                             "async fabric already scans its rounds — "
+                             "drop jit or the net config")
 
     # ------------------------------------------------------------------
     # membership events
@@ -176,14 +197,39 @@ class OnlineSession:
         before the first ``run``)."""
         return {} if self._plan is None else dict(self._plan.stats)
 
+    def _effective_backend(self) -> str:
+        return effective_backend(self.config)
+
+    def _async_net_kwargs(self, was_dirty: bool, old_active,
+                          plan: engine_plan.Plan) -> dict:
+        """Carried fabric state for the async backend, with the Fig.-7
+        warm-fill applied when membership changed since the last run."""
+        cfg = self.config
+        if (was_dirty and self._net_state is not None
+                and old_active is not None):
+            changed = np.asarray(plan.prob.active) != old_active
+            if changed.any():
+                payload = self.state.r * plan.prob.active[..., None]
+                self._net_state = self._net_fabric.warm_fill(
+                    self._net_state, payload,
+                    jnp.asarray(changed, jnp.float32))
+        out = {}
+        kw = dict(plan=plan, fabric=self._net_fabric,
+                  fabric_state=self._net_state, round0=self.iteration,
+                  meter_out=out)
+        if cfg.net is not None:
+            kw["net"] = cfg.net
+        return kw
+
     def run(self, iters: Optional[int] = None, *, record: bool = True):
         """Advance the live network ``iters`` ADMM iterations under the
         CURRENT membership masks.  Returns the (iters, V, T) risk curve
         when a test set was given (and ``record``), else None."""
         cfg = self.config
+        backend = self._effective_backend()
         iters = iters if iters is not None else cfg.iters
         with_eval = record and self._test is not None
-        if self._jit and cfg.backend == "vmap":
+        if self._jit and backend == "vmap":
             Xte, yte = self._test if with_eval else (None, None)
             prob = self.problem()
             if self.state is None:
@@ -198,16 +244,36 @@ class OnlineSession:
             if with_eval:
                 Xte, yte = self._test
                 ev = lambda st: core.risks(st.r, Xte, yte)  # noqa: E731
-            plan = (self._current_plan() if cfg.backend == "vmap" else None)
+            was_dirty = self._masks_dirty
+            old_active = (None if self._plan is None
+                          else np.asarray(self._plan.prob.active))
+            use_plan = backend in ("vmap", "async")
+            plan = self._current_plan() if use_plan else None
             prob = plan.prob if plan is not None else self.problem()
             if self.state is None:
                 self.state = core.init_state(prob)
             plan_kw = {} if plan is None else {"plan": plan}
+            if backend == "async":
+                plan_kw.update(self._async_net_kwargs(was_dirty,
+                                                      old_active, plan))
             self.state, hist = backends.run(
-                prob, iters, backend=cfg.backend, qp_iters=cfg.qp_iters,
+                prob, iters, backend=backend, qp_iters=cfg.qp_iters,
                 qp_solver=cfg.qp_solver, state=self.state, eval_fn=ev,
                 **plan_kw, **cfg.backend_options)
+            if backend == "async":
+                out = plan_kw["meter_out"]
+                self._net_fabric = out["fabric"]
+                self._net_state = out["fabric_state"]
+                self._net_series.extend(
+                    out["report"]["bytes_round_series"])
         self.iteration += iters
+        if backend == "async":
+            from repro.net import meter
+            # cumulative accounting: the fabric counters carry across
+            # stages, so re-derive against the total round count
+            self.net_report_ = meter.report(
+                self._net_fabric, self._net_state, rounds=self.iteration,
+                bytes_per_round=np.asarray(self._net_series))
         if hist is not None:
             self.history.append(np.asarray(hist))
         return None if hist is None else np.asarray(hist)

@@ -33,6 +33,7 @@ from repro.api import backends, evaluate
 from repro.core import csvm as csvm_lib
 from repro.core import dsvm as dsvm_lib
 from repro.core import dtsvm as core
+from repro.net.policies import NetConfig
 
 
 @dataclass(frozen=True)
@@ -51,9 +52,12 @@ class SolverConfig:
     qp_iters: int = 200              # inner box-QP iterations
     qp_solver: str = "fista"         # "fista" | "pg" | "pallas_fused"
     box_scale: Optional[float] = None   # paper's V*T multiplier (auto)
-    backend: str = "vmap"            # "vmap" | "shard_map"
+    backend: str = "vmap"            # "vmap" | "shard_map" | "async"
     backend_options: Dict[str, Any] = field(default_factory=dict)
     # e.g. {"topology": "ring"} or {"mesh": ..., "axis": "nodes"}
+    net: Optional[NetConfig] = None  # communication model (repro.net);
+    # setting it routes the default backend to "async" — the identity
+    # NetConfig() reproduces the vmap trajectory bitwise, now metered
 
     def replace(self, **kw) -> "SolverConfig":
         return dataclasses.replace(self, **kw)
@@ -80,6 +84,20 @@ def _as_solver_config(config, overrides) -> SolverConfig:
     return cfg
 
 
+def effective_backend(cfg: SolverConfig) -> str:
+    """The backend a config actually runs: a communication model
+    (``cfg.net``) promotes the default "vmap" to "async" and is invalid
+    with any other backend.  Shared by solvers and the OnlineSession so
+    the resolution policy lives in one place."""
+    if cfg.net is not None:
+        if cfg.backend == "vmap":
+            return "async"
+        if cfg.backend != "async":
+            raise ValueError(f"SolverConfig.net is an async-backend "
+                             f"feature; got backend={cfg.backend!r}")
+    return cfg.backend
+
+
 class _ConsensusSolver:
     """Shared machinery for the two decentralized solvers."""
 
@@ -88,6 +106,7 @@ class _ConsensusSolver:
         self.problem_: Optional[core.DTSVMProblem] = None
         self.state_: Optional[core.DTSVMState] = None
         self.history_ = None
+        self.net_report_: Optional[Dict[str, Any]] = None   # async backend
 
     # -- problem construction (the one subclass hook) ----------------------
     def make_problem(self, X, y, mask=None, adj=None, *, active=None,
@@ -119,11 +138,17 @@ class _ConsensusSolver:
         if eval_fn is None and X_test is not None:
             eval_fn = evaluate.risk_eval_fn(prob.X.shape[0], X_test, y_test)
         cfg = self.config
+        backend, options = effective_backend(cfg), dict(cfg.backend_options)
+        if cfg.net is not None:
+            options.setdefault("net", cfg.net)
+        if backend == "async":
+            options.setdefault("meter_out", {})
         self.state_, self.history_ = backends.run(
             prob, iters if iters is not None else cfg.iters,
-            backend=cfg.backend, qp_iters=cfg.qp_iters,
+            backend=backend, qp_iters=cfg.qp_iters,
             qp_solver=cfg.qp_solver, state=state,
-            eval_fn=eval_fn, **cfg.backend_options)
+            eval_fn=eval_fn, **options)
+        self.net_report_ = options.get("meter_out", {}).get("report")
         self.problem_ = prob
         return self
 
@@ -212,6 +237,10 @@ class CSVM:
             "CSVM is a direct (single-shot) solver; use fit()")
 
     def fit(self, X, y, mask=None, adj=None, **_ignored) -> "CSVM":
+        if self.config.net is not None:
+            raise ValueError("SolverConfig.net models a decentralized "
+                             "network; CSVM is centralized (no links to "
+                             "model) — drop net or use DSVM/DTSVM")
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
         if X.ndim == 2:                       # single task, pooled already

@@ -92,6 +92,11 @@ def _split_grid(cfgs: Sequence, base: Optional[SolverConfig]):
     override list from a mixed grid of mappings / SolverConfigs."""
     base = base if base is not None else SolverConfig()
     solver_cfgs = [c for c in cfgs if isinstance(c, SolverConfig)]
+    if base.net is not None or any(c.net is not None for c in solver_cfgs):
+        raise ValueError(
+            "SolverConfig.net is a single-fit (async backend) feature; "
+            "the batched sweep runs the synchronous engine — fit lossy "
+            "configs one at a time through DTSVM(cfg.replace(net=...))")
     for key in ("iters", "qp_iters", "qp_solver", "backend"):
         vals = {getattr(c, key) for c in solver_cfgs}
         vals.add(getattr(base, key))

@@ -1,0 +1,48 @@
+"""repro.net — an asynchronous, lossy, metered communication fabric.
+
+The paper's premise is that nodes exchange ONLY tiny decision variables
+over a real network; this package makes the network real.  A ``Fabric``
+owns per-edge ``LinkPolicy`` (delay in rounds, drop probability,
+int8/int16/float16 wire formats, bandwidth caps) and per-node mailboxes
+of last-received neighbor variables; ``run_async`` executes Prop. 1
+where every node steps against possibly-stale mailbox contents under an
+activation/link ``Schedule``, and every byte that crosses an edge is
+metered:
+
+    from repro.net import LinkPolicy, NetConfig, run_async
+    net = NetConfig(policy=LinkPolicy(quant="int8", drop=0.1, delay=1),
+                    schedule="partial:0.5", seed=0)
+    res = run_async(prob, iters=60, net=net)
+    res.report["bytes_per_round"], res.state
+
+or, one level up, through the solver surface:
+
+    DTSVM(SolverConfig(net=net)).fit(X, y, mask=mask, adj=adj)
+
+The identity configuration (zero delay/drop, float32, trivial schedule)
+is BITWISE identical to ``backend="vmap"`` — the fabric generalizes the
+synchronous path, it does not fork it.  See API.md §net.
+"""
+from repro.net.async_admm import AsyncResult, run_async
+from repro.net.fabric import Fabric, FabricState, build_fabric
+from repro.net.policies import (LinkPolicy, NetConfig, apply_quant,
+                                bytes_per_message)
+from repro.net.schedule import Schedule, resolve as resolve_schedule
+from repro.net import meter, policies, schedule
+
+__all__ = [
+    "AsyncResult",
+    "Fabric",
+    "FabricState",
+    "LinkPolicy",
+    "NetConfig",
+    "Schedule",
+    "apply_quant",
+    "build_fabric",
+    "bytes_per_message",
+    "meter",
+    "policies",
+    "resolve_schedule",
+    "run_async",
+    "schedule",
+]

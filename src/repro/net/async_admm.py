@@ -1,0 +1,156 @@
+"""Asynchronous Prop.-1 ADMM over a Fabric: stale mailboxes, real bytes.
+
+The synchronous engine step (``repro.engine.plan_step``) touches the
+network in exactly two places, both through its ``nbr_reduce`` hook:
+
+    1. the f^{(k)} linear term sums the neighbors' PREVIOUS decision
+       variables (eq. 11), and
+    2. the beta multiplier update sums their FRESH ones (eq. 9).
+
+``run_async`` re-executes the untouched ``plan_step`` with a fabric-
+backed ``nbr_reduce``: call 1 reads the mailboxes as they stand (stale,
+quantized, whatever the links delivered), call 2 publishes the node's
+new variables through the fabric — one metered exchange per round — and
+reads the post-delivery mailboxes.  Per-round activation masks from the
+schedule gate both the state update (inactive nodes freeze, exactly the
+``active``-mask semantics of the core) and the sends.
+
+Because the identity fabric's reduce IS the synchronous dense-adjacency
+einsum over exactly the values the vmap path would sum, the lossless /
+zero-delay / trivial-schedule configuration reproduces
+``compile_problem``'s trajectory BIT FOR BIT (tests/test_net.py) — the
+async fabric is a strict generalization, not a parallel implementation.
+
+The whole loop is one ``lax.scan``; fabric state (mailboxes, delay
+rings, byte counters) is part of the carry, so a run can be split
+across calls (the OnlineSession does) without changing the stream:
+drops are keyed on the absolute round counter carried in the state.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dtsvm as core
+from repro.engine import plan as engine_plan
+from repro.net import fabric as fabric_lib
+from repro.net import meter as meter_lib
+from repro.net import schedule as schedule_lib
+from repro.net.policies import NetConfig
+
+
+class AsyncResult(NamedTuple):
+    state: core.DTSVMState
+    history: Optional[jnp.ndarray]    # (iters, ...) eval_fn outputs or None
+    fabric_state: fabric_lib.FabricState
+    report: dict                      # byte/message accounting (meter)
+    fabric: fabric_lib.Fabric
+
+
+def _fabric_step(plan: engine_plan.Plan, fab: fabric_lib.Fabric,
+                 state: core.DTSVMState, fst: fabric_lib.FabricState,
+                 act, links, task_counts):
+    """One async round: the untouched ``plan_step`` against a fabric-
+    backed ``nbr_reduce``, then the schedule's freeze merge."""
+    calls = {"n": 0}
+    cell = {}
+
+    def nbr_reduce(arr):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            # eq. (11): last-received neighbor variables, as they stand
+            return fab.reduce(fst)
+        # eq. (9): publish this round's fresh variables, then read what
+        # the links actually delivered
+        fst2, bytes_now = fab.exchange(fst, arr, act, links,
+                                       task_counts=task_counts)
+        cell["fst"] = fst2
+        cell["bytes"] = bytes_now
+        return fab.reduce(fst2)
+
+    new = engine_plan.plan_step(plan.prob, plan.inv, state,
+                                qp_iters=plan.qp_iters,
+                                qp_solver=plan.qp_solver,
+                                nbr_reduce=nbr_reduce)
+    if calls["n"] != 2:
+        raise AssertionError(
+            f"plan_step called nbr_reduce {calls['n']} times, expected 2 "
+            f"(f-term + beta update); the fabric hook needs updating")
+    # schedule freeze: a node that did not compute this round keeps its
+    # whole state (same semantics as the core's task-level active mask)
+    on = act > 0
+    merged = core.DTSVMState(
+        r=jnp.where(on[:, None, None], new.r, state.r),
+        alpha=jnp.where(on[:, None, None], new.alpha, state.alpha),
+        beta=jnp.where(on[:, None, None], new.beta, state.beta),
+        lam=jnp.where(on[:, None, None], new.lam, state.lam),
+    )
+    return merged, cell["fst"], cell["bytes"]
+
+
+def run_async(prob: core.DTSVMProblem, iters: int, *,
+              net: Optional[NetConfig] = None,
+              plan: Optional[engine_plan.Plan] = None,
+              fabric: Optional[fabric_lib.Fabric] = None,
+              fabric_state: Optional[fabric_lib.FabricState] = None,
+              qp_iters: int = 200, qp_solver: str = "fista",
+              state: Optional[core.DTSVMState] = None,
+              eval_fn: Optional[Callable] = None,
+              round0: int = 0) -> AsyncResult:
+    """Run ``iters`` asynchronous rounds of Prop. 1 over the fabric.
+
+    ``net`` declares the communication model (default: identity — the
+    synchronous trajectory, now with byte metering).  ``plan`` /
+    ``fabric`` / ``fabric_state`` let callers carry compiled invariants
+    and live mailboxes across calls (the OnlineSession path); ``round0``
+    enters the schedule stream at that absolute round (and, when
+    ``fabric_state`` is None, starts the fabric's round counter there —
+    a carried fabric_state keeps its own).
+    """
+    net = net if net is not None else NetConfig()
+    if plan is None:
+        plan = engine_plan.compile_problem(prob, qp_iters=qp_iters,
+                                           qp_solver=qp_solver)
+    if state is None:
+        state = core.init_state(prob)
+    V = prob.X.shape[0]
+
+    sched = schedule_lib.resolve(net.schedule, seed=net.seed)
+    acts, links = sched.emit(V, iters, adj=np.asarray(prob.adj),
+                             round0=round0)
+    acts = jnp.asarray(acts, jnp.float32)                  # (iters, V)
+    has_links = links is not None
+    if fabric is None:
+        fabric = fabric_lib.build_fabric(prob, net,
+                                         force_mailbox=has_links)
+    elif has_links and fabric.mode == "buffer":
+        raise ValueError("a link-varying schedule needs a mailbox-mode "
+                         "fabric; build it with force_mailbox=True")
+    if fabric_state is None:
+        payload0 = state.r * prob.active[..., None]
+        fabric_state = fabric.init_state(payload0, round0=round0)
+    task_counts = jnp.sum(prob.active, axis=1)             # (V,) live rows
+
+    xs = (acts, jnp.asarray(links) if has_links else jnp.zeros(
+        (iters, 1), bool))
+
+    def body(carry, x):
+        st, fst = carry
+        act, lnk = x
+        lnk = lnk if has_links else None
+        st, fst, bytes_now = _fabric_step(plan, fabric, st, fst, act, lnk,
+                                          task_counts)
+        ev = eval_fn(st) if eval_fn is not None else jnp.float32(0)
+        return (st, fst), (ev, bytes_now)
+
+    (state, fabric_state), (hist, bytes_rounds) = jax.lax.scan(
+        body, (state, fabric_state), xs, length=iters)
+    report = meter_lib.report(fabric, fabric_state, rounds=iters,
+                              bytes_per_round=bytes_rounds)
+    return AsyncResult(state=state,
+                       history=hist if eval_fn is not None else None,
+                       fabric_state=fabric_state, report=report,
+                       fabric=fabric)

@@ -1,0 +1,92 @@
+"""Byte and message accounting — the paper's efficiency claim, measured.
+
+The fabric counts transmissions in units of per-task wire vectors (one
+(2p+2)-vector in the edge's wire format); this module turns the raw
+counters into a serializable report:
+
+    bytes_sent        total charged bytes across all edges and rounds
+    bytes_per_round   average + the full per-round series (risk-vs-bytes
+                      curves integrate this)
+    bytes_per_edge    (V, V) matrix [receiver, sender]
+    msgs_sent /
+    msgs_delivered    task-vector counts; their gap is in-transit loss
+                      plus anything still in the delay rings
+    delivery_rate     delivered / sent (1.0 on a perfect fabric)
+    warmfill_msgs     out-of-band bootstrap deliveries (mailbox priming
+                      and Fig.-7 task-entry refreshes), kept OUT of the
+                      per-round totals
+    bytes_per_message per-edge wire size of one task vector (min/max)
+
+Everything is plain python floats/lists — json.dump-ready, so
+``benchmarks/bench_comms.py`` can commit the numbers directly.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+def report(fabric, fstate, *, rounds: int,
+           bytes_per_round: Optional[np.ndarray] = None) -> dict:
+    """Aggregate one run's fabric counters into a JSON-ready dict."""
+    msgs_sent = np.asarray(fstate.msgs_sent, np.float64)
+    msgs_deliv = np.asarray(fstate.msgs_delivered, np.float64)
+    bytes_m = np.asarray(fabric.bytes_m, np.float64)
+    bytes_edge = msgs_sent * bytes_m
+    total = float(bytes_edge.sum())
+    series = (None if bytes_per_round is None
+              else np.asarray(bytes_per_round, np.float64))
+    sent = float(msgs_sent.sum())
+    onwire = bytes_m[bytes_m > 0]
+    rep = {
+        "mode": fabric.mode,
+        "rounds": int(rounds),
+        "edges": int(np.count_nonzero(np.asarray(fabric.adj))),
+        "payload_dim": int(fabric.D),
+        "msgs_sent": sent,
+        "msgs_delivered": float(msgs_deliv.sum()),
+        "delivery_rate": float(msgs_deliv.sum() / sent) if sent else 1.0,
+        "bytes_sent": total,
+        "bytes_per_round": total / rounds if rounds else 0.0,
+        "bytes_per_edge": bytes_edge.tolist(),
+        "bytes_per_message_min": float(onwire.min()) if onwire.size else 0.0,
+        "bytes_per_message_max": float(onwire.max()) if onwire.size else 0.0,
+        "warmfill_msgs": float(np.asarray(fstate.warmfill_msgs)),
+    }
+    if series is not None:
+        rep["bytes_round_series"] = series.tolist()
+        # the scan series counts the same bytes edge-wise accounting does
+        # (up to f32 accumulation); keep both as a consistency check
+        rep["bytes_sent_series_total"] = float(series.sum())
+    return rep
+
+
+def merge_reports(a: dict, b: dict) -> dict:
+    """Combine the standalone reports of two sequential ``run_async``
+    calls that did NOT share a fabric state.  (The OnlineSession carries
+    one fabric state across stages, so its cumulative ``net_report_``
+    comes straight from the carried counters instead.)"""
+    out = dict(b)
+    out["rounds"] = a["rounds"] + b["rounds"]
+    for k in ("msgs_sent", "msgs_delivered", "bytes_sent", "warmfill_msgs"):
+        out[k] = a[k] + b[k]
+    out["bytes_per_round"] = out["bytes_sent"] / max(out["rounds"], 1)
+    out["delivery_rate"] = (out["msgs_delivered"] / out["msgs_sent"]
+                            if out["msgs_sent"] else 1.0)
+    if "bytes_round_series" in a and "bytes_round_series" in b:
+        out["bytes_round_series"] = (list(a["bytes_round_series"])
+                                     + list(b["bytes_round_series"]))
+        out["bytes_sent_series_total"] = (a["bytes_sent_series_total"]
+                                          + b["bytes_sent_series_total"])
+    out["bytes_per_edge"] = (np.asarray(a["bytes_per_edge"])
+                             + np.asarray(b["bytes_per_edge"])).tolist()
+    return out
+
+
+def summarize(rep: dict) -> str:
+    """One human line for example scripts and benchmark stdout."""
+    return (f"{rep['rounds']} rounds, {rep['msgs_sent']:.0f} msgs "
+            f"({rep['delivery_rate']:.0%} delivered), "
+            f"{rep['bytes_sent'] / 1024:.1f} KiB total "
+            f"({rep['bytes_per_round']:.0f} B/round)")

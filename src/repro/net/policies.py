@@ -1,0 +1,154 @@
+"""Link policies: what a directed edge does to a message in flight.
+
+A ``LinkPolicy`` is a tiny, declarative description of one link's
+imperfections — everything the fabric needs to turn the paper's ideal
+synchronous exchange into a measured, lossy, delayed one:
+
+    delay       rounds between send and delivery (0 = same round, the
+                synchronous semantics)
+    drop        i.i.d. per-round probability that a sent message is lost
+                in transit (bytes are still spent by the sender)
+    quant       wire format of the (2p+2)-vector: "float32" (lossless),
+                "float16", "int16" or "int8" (symmetric per-vector scale,
+                deterministic round-to-nearest-even)
+    bandwidth   sender-side byte budget per round (token bucket); a
+                message only leaves when the accumulated credit covers
+                its wire size — otherwise the round's send is skipped
+                and the receiver keeps its stale copy.  None = unmetered.
+
+``NetConfig`` bundles one default policy, optional per-edge overrides
+(keyed by the DIRECTED pair ``(u, v)`` = sender, receiver), an
+activation/link schedule spec (see ``repro.net.schedule``) and the seed
+that makes every stochastic choice (drops, partial activation)
+reproducible.
+
+Byte accounting (``bytes_per_message``) charges the payload at its wire
+width plus a 4-byte scale word for the integer formats — the number the
+paper's "only tiny decision variables cross the network" claim turns
+into; ``repro.net.meter`` aggregates it per edge and per round.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Mapping, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+# wire-format codes, used as static per-edge integer matrices inside the
+# fabric (lax.select between the dequantized variants)
+QUANT_CODES: Dict[str, int] = {"float32": 0, "float16": 1,
+                               "int16": 2, "int8": 3}
+_QMAX = {2: 32767.0, 3: 127.0}           # code -> symmetric int range
+
+
+@dataclass(frozen=True)
+class LinkPolicy:
+    """One directed link's behavior; the identity default is a perfect
+    synchronous wire (zero delay, no loss, float32, unmetered)."""
+    delay: int = 0
+    drop: float = 0.0
+    quant: str = "float32"
+    bandwidth: Optional[float] = None     # bytes per round, None = inf
+
+    def __post_init__(self):
+        if self.delay < 0:
+            raise ValueError(f"delay must be >= 0, got {self.delay}")
+        if not 0.0 <= self.drop <= 1.0:
+            raise ValueError(f"drop must be in [0, 1], got {self.drop}")
+        if self.quant not in QUANT_CODES:
+            raise ValueError(f"unknown quant {self.quant!r}; expected one "
+                             f"of {sorted(QUANT_CODES)}")
+        if self.bandwidth is not None and self.bandwidth <= 0:
+            raise ValueError("bandwidth must be positive (or None)")
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the link is a perfect synchronous float32 wire."""
+        return (self.delay == 0 and self.drop == 0.0
+                and self.quant == "float32" and self.bandwidth is None)
+
+
+@dataclass(frozen=True)
+class NetConfig:
+    """The whole network's communication model, declaratively.
+
+    ``policy`` applies to every edge of the consensus graph unless
+    ``edge_policies[(u, v)]`` overrides the directed link u -> v.
+    ``schedule`` is a spec understood by ``repro.net.schedule.resolve``
+    ("full", "round_robin", "partial:0.5", "gossip", "links:random:0.6",
+    or a Schedule instance).  ``warm_fill`` bootstraps every mailbox
+    with the senders' initial decision variables (one metered exchange)
+    — the Fig.-7 joining-task semantics; without it mailboxes start at
+    zero.
+    """
+    policy: LinkPolicy = field(default_factory=LinkPolicy)
+    edge_policies: Optional[Mapping[Tuple[int, int], LinkPolicy]] = None
+    schedule: Union[str, object] = "full"
+    seed: int = 0
+    warm_fill: bool = True
+
+    def edge_policy(self, u: int, v: int) -> LinkPolicy:
+        """The effective policy of the directed link u -> v."""
+        if self.edge_policies:
+            return self.edge_policies.get((u, v), self.policy)
+        return self.policy
+
+    @property
+    def is_identity(self) -> bool:
+        """True when every link is a perfect synchronous float32 wire."""
+        if not self.policy.is_identity:
+            return False
+        return not self.edge_policies or all(
+            p.is_identity for p in self.edge_policies.values())
+
+
+# ---------------------------------------------------------------------------
+# wire formats
+# ---------------------------------------------------------------------------
+def bytes_per_message(quant: str, dim: int) -> float:
+    """Wire bytes of one ``dim``-vector message under a quant format.
+
+    Integer formats carry one float32 scale word next to the payload.
+    """
+    code = QUANT_CODES[quant]
+    if code == 0:
+        return 4.0 * dim
+    if code == 1:
+        return 2.0 * dim
+    if code == 2:
+        return 2.0 * dim + 4.0
+    return 1.0 * dim + 4.0
+
+
+def _int_roundtrip(x: jnp.ndarray, qmax: float) -> jnp.ndarray:
+    """Symmetric per-vector integer quantize -> dequantize (last axis).
+
+    Deterministic: scale = max|x| / qmax over the vector, round-to-
+    nearest-even (jnp.round), zero vectors stay exactly zero.
+    """
+    s = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / qmax
+    safe = jnp.where(s > 0, s, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -qmax, qmax)
+    return jnp.where(s > 0, q * s, 0.0)
+
+
+def apply_quant(x: jnp.ndarray, code: int) -> jnp.ndarray:
+    """Quantize-dequantize roundtrip of payload ``x`` for a static code."""
+    if code == 0:
+        return x
+    if code == 1:
+        return x.astype(jnp.float16).astype(jnp.float32)
+    return _int_roundtrip(x, _QMAX[code])
+
+
+def quant_error_bound(x: np.ndarray, quant: str) -> float:
+    """A priori worst-case absolute roundtrip error (test oracle)."""
+    code = QUANT_CODES[quant]
+    if code == 0:
+        return 0.0
+    amax = float(np.max(np.abs(x), axis=-1, keepdims=False).max()) \
+        if np.size(x) else 0.0
+    if code == 1:
+        return amax * 2.0 ** -10 + 1e-12   # half-precision ulp at amax
+    return 0.5 * amax / _QMAX[code] + 1e-12

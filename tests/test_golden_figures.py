@@ -32,6 +32,11 @@ FIG2_REGIME = dict(V=6, deg=0.8, n_tgt=40, n_src=200, seeds=(0,),
                    iters=12, n_test=300)
 FIG3_REGIME = dict(eps_grid=(0.1, 10.0), seeds=(0,), iters=10, V=6,
                    n_per_task=(24, 120), degree=0.8, qp_iters=60)
+FIG5_REGIME = dict(pos_fracs=(2 / 12, 4 / 12), seeds=(0,), iters=10,
+                   V=4, n_per_task=(12, 120), n_test=300,
+                   csvm_qp_iters=300)
+FIG6_REGIME = dict(seeds=(0,), iters=10, V=6, n_tgt=4, n_src=80,
+                   n_test=300)
 
 
 def _fig2_outputs():
@@ -55,8 +60,27 @@ def _fig3_outputs():
             "csvm": np.asarray(csvm_m).tolist()}
 
 
+def _fig5_outputs():
+    import fig5_unbalanced
+    r = dict(FIG5_REGIME)
+    out, _ = fig5_unbalanced.scenario_risks(
+        r.pop("pos_fracs"), r.pop("seeds"), r.pop("iters"), **r)
+    return {"scenarios": [[pf, *vals] for pf, vals in out.items()]}
+
+
+def _fig6_outputs():
+    import fig6_mixed
+    r = dict(FIG6_REGIME)
+    left, right, _ = fig6_mixed.mixed_network_risks(
+        r.pop("seeds"), r.pop("iters"), **r)
+    return {"left_dsvm": np.asarray(left).tolist(),
+            "right_mixed": np.asarray(right).tolist()}
+
+
 _FIGS = {"fig2": (_fig2_outputs, FIG2_REGIME),
-         "fig3": (_fig3_outputs, FIG3_REGIME)}
+         "fig3": (_fig3_outputs, FIG3_REGIME),
+         "fig5": (_fig5_outputs, FIG5_REGIME),
+         "fig6": (_fig6_outputs, FIG6_REGIME)}
 
 
 def _load(name):
