@@ -22,6 +22,7 @@ def main() -> None:
     fast = not args.full
 
     import bench_fit
+    import bench_scale
     import fig2_convergence
     import fig3_eps_sweep
     import fig4_c_sweep
@@ -39,6 +40,7 @@ def main() -> None:
         "fig6": fig6_mixed.main,
         "fig7": fig7_online.main,
         "fit": bench_fit.main,
+        "scale": bench_scale.main,
         "kernels": kernels_bench.main,
         "roofline": lambda fast: roofline.main([]),
     }

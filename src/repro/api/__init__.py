@@ -5,11 +5,15 @@
 - ``solvers``: one fit/predict protocol over CSVM / DSVM / DTSVM
 - ``sweep``: ``sweep_fit`` — a whole hyper-parameter grid (Figs. 3-6)
   as ONE batched fit, bitwise identical to the serial loop
-- ``backends``: execution-strategy registry ("vmap", "shard_map"),
-  for single fits and for batched sweeps
+- ``backends``: execution-strategy registry ("vmap", "shard_map",
+  "async", "sample_shard"), for single fits and for batched sweeps
 - ``session``: OnlineSession for online task enter/leave (Fig. 7),
   incrementally re-planned via ``repro.engine``
 - ``evaluate``: shared risk-curve / residual evaluation
+
+``SolverConfig(budget=PlanBudget(...))`` bounds the memory of the
+invariant (Gram) build — the large-n scale path (API.md §scale);
+``backend="sample_shard"`` splits a node's samples across devices.
 
 ``SolverConfig(net=NetConfig(...))`` routes any fit through the
 communication fabric (``repro.net``): lossy/delayed/quantized links,
@@ -28,10 +32,11 @@ from repro.api import backends, evaluate
 from repro.api.session import OnlineSession
 from repro.api.solvers import CSVM, DSVM, DTSVM, Solver, SolverConfig
 from repro.api.sweep import SweepResult, dsvm_overrides, sweep_fit
+from repro.engine.invariants import PlanBudget
 from repro.net.policies import LinkPolicy, NetConfig
 
 __all__ = [
     "CSVM", "DSVM", "DTSVM", "LinkPolicy", "NetConfig", "OnlineSession",
-    "Solver", "SolverConfig", "SweepResult", "backends", "dsvm_overrides",
-    "evaluate", "sweep_fit",
+    "PlanBudget", "Solver", "SolverConfig", "SweepResult", "backends",
+    "dsvm_overrides", "evaluate", "sweep_fit",
 ]

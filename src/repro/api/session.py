@@ -141,6 +141,8 @@ class OnlineSession:
         return self
 
     def set_active(self, active) -> "OnlineSession":
+        """Replace the whole (V, T) activity mask at once (bulk form of
+        ``add_task``/``drop_task``)."""
         self._active = np.array(active, np.float32, copy=True).reshape(
             self.V, self.T)
         self._masks_dirty = True
@@ -252,16 +254,22 @@ class OnlineSession:
             prob = plan.prob if plan is not None else self.problem()
             if self.state is None:
                 self.state = core.init_state(prob)
-            plan_kw = {} if plan is None else {"plan": plan}
+            options = dict(cfg.backend_options)
+            if plan is not None:
+                options["plan"] = plan
+            elif cfg.budget is not None:
+                # plan-less backends compile per call — keep the K
+                # build streamed there too
+                options.setdefault("budget", cfg.budget)
             if backend == "async":
-                plan_kw.update(self._async_net_kwargs(was_dirty,
+                options.update(self._async_net_kwargs(was_dirty,
                                                       old_active, plan))
             self.state, hist = backends.run(
                 prob, iters, backend=backend, qp_iters=cfg.qp_iters,
                 qp_solver=cfg.qp_solver, state=self.state, eval_fn=ev,
-                **plan_kw, **cfg.backend_options)
+                **options)
             if backend == "async":
-                out = plan_kw["meter_out"]
+                out = options["meter_out"]
                 self._net_fabric = out["fabric"]
                 self._net_state = out["fabric_state"]
                 self._net_series.extend(

@@ -33,6 +33,7 @@ from repro.api import backends, evaluate
 from repro.core import csvm as csvm_lib
 from repro.core import dsvm as dsvm_lib
 from repro.core import dtsvm as core
+from repro.engine.invariants import PlanBudget
 from repro.net.policies import NetConfig
 
 
@@ -42,6 +43,38 @@ class SolverConfig:
 
     The algorithmic fields mirror the paper's Section-IV defaults; the
     execution fields select how ``fit`` runs, not what it computes.
+
+    Parameters
+    ----------
+    C : float
+        SVM error penalty (paper Section IV sweeps it, Fig. 4).
+    eps1, eps2 : float
+        Shared / task-specific regularization weights of Prop. 1.
+    eta1, eta2 : float
+        Task- and node-consensus ADMM weights.
+    iters : int
+        ADMM iterations per ``fit()``.
+    qp_iters : int
+        Inner box-QP iterations per ADMM step.
+    qp_solver : str
+        Dual QP engine: ``"fista" | "pg" | "pallas_fused"``
+        (``repro.engine.qp_engines``).
+    box_scale : float, optional
+        The paper's multiplier on ``C`` in the QP box (auto: ``V*T``).
+    backend : str
+        Execution strategy: ``"vmap" | "shard_map" | "async" |
+        "sample_shard"`` (``repro.api.backends``).
+    backend_options : dict
+        Backend extras, e.g. ``{"topology": "ring"}`` (shard_map) or
+        ``{"n_shards": 4, "reduce": "psum"}`` (sample_shard).
+    net : repro.net.NetConfig, optional
+        Communication model; setting it routes the default backend to
+        ``"async"`` — the identity ``NetConfig()`` reproduces the vmap
+        trajectory bitwise, now metered.
+    budget : repro.engine.PlanBudget, optional
+        Memory budget for the invariant (K) build: streams the Gram
+        construction through bounded row panels — bitwise identical to
+        the dense build (the large-n scale path; API.md §scale).
     """
     C: float = 0.01
     eps1: float = 1.0
@@ -58,8 +91,10 @@ class SolverConfig:
     net: Optional[NetConfig] = None  # communication model (repro.net);
     # setting it routes the default backend to "async" — the identity
     # NetConfig() reproduces the vmap trajectory bitwise, now metered
+    budget: Optional[PlanBudget] = None   # large-n K-build streaming
 
     def replace(self, **kw) -> "SolverConfig":
+        """A copy with the given fields replaced (frozen dataclass)."""
         return dataclasses.replace(self, **kw)
 
 
@@ -69,12 +104,24 @@ class Solver(Protocol):
 
     config: SolverConfig
 
-    def init_state(self, prob): ...
-    def step(self, state, prob): ...
-    def fit(self, X, y, mask=None, adj=None, **kw) -> "Solver": ...
-    def predict(self, X): ...
-    def risks(self, X_test, y_test): ...
-    def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]: ...
+    def init_state(self, prob):
+        """Zero state for ``prob`` (a ``core.DTSVMState`` for the
+        consensus solvers)."""
+
+    def step(self, state, prob):
+        """One algorithm iteration ``state -> state``."""
+
+    def fit(self, X, y, mask=None, adj=None, **kw) -> "Solver":
+        """Train on X (V, T, N, p) / y (V, T, N); returns self."""
+
+    def predict(self, X):
+        """Predicted labels in {-1, +1} for test inputs."""
+
+    def risks(self, X_test, y_test):
+        """Misclassification rates on a shared (T, n, p) test set."""
+
+    def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """(task, node) consensus-constraint violations of the fit."""
 
 
 def _as_solver_config(config, overrides) -> SolverConfig:
@@ -141,6 +188,8 @@ class _ConsensusSolver:
         backend, options = effective_backend(cfg), dict(cfg.backend_options)
         if cfg.net is not None:
             options.setdefault("net", cfg.net)
+        if cfg.budget is not None:
+            options.setdefault("budget", cfg.budget)
         if backend == "async":
             options.setdefault("meter_out", {})
         self.state_, self.history_ = backends.run(
@@ -189,6 +238,12 @@ class DTSVM(_ConsensusSolver):
 
     def make_problem(self, X, y, mask=None, adj=None, *, active=None,
                      couple=None) -> core.DTSVMProblem:
+        """The full Prop.-1 problem tensor from user arrays.
+
+        X: (V, T, N, p) float32, y/mask: (V, T, N), adj: (V, V) bool;
+        ``active`` (V, T) / ``couple`` (V,) mask mixed networks
+        (Fig. 6).  Hyper-parameters come from ``self.config``.
+        """
         cfg = self.config
         return core.make_problem(
             X, y, mask, adj, C=cfg.C, eps1=cfg.eps1, eps2=cfg.eps2,
@@ -206,6 +261,9 @@ class DSVM(_ConsensusSolver):
 
     def make_problem(self, X, y, mask=None, adj=None, *, active=None,
                      couple=None) -> core.DTSVMProblem:
+        """The same problem tensor with task coupling forced off and
+        Forero's V*C box — the paper's single-task baseline [7].
+        ``couple`` is ignored by construction."""
         cfg = self.config
         return dsvm_lib.make_dsvm_problem(
             X, y, mask, adj, C=cfg.C, eps2=cfg.eps2, eta2=cfg.eta2,
@@ -230,13 +288,21 @@ class CSVM:
         self.history_ = None
 
     def init_state(self, prob=None):
+        """The fitted (w (T, p), b (T,)) pair — CSVM has no ADMM state."""
         return (self.w_, self.b_)
 
     def step(self, state, prob):
+        """CSVM is a direct (single-shot) solver — always raises."""
         raise NotImplementedError(
             "CSVM is a direct (single-shot) solver; use fit()")
 
     def fit(self, X, y, mask=None, adj=None, **_ignored) -> "CSVM":
+        """Pool all nodes' data per task and solve one box QP per task.
+
+        Accepts the identical (V, T, N, p) layout (plus plain (N, p)
+        single-task data); ``adj`` is accepted and ignored so swapping
+        CSVM for DTSVM stays a one-line change.  Returns self.
+        """
         if self.config.net is not None:
             raise ValueError("SolverConfig.net models a decentralized "
                              "network; CSVM is centralized (no links to "
@@ -273,6 +339,7 @@ class CSVM:
         return jnp.einsum("tnp,tp->tn", X, self.w_) + self.b_[:, None]
 
     def predict(self, X) -> jnp.ndarray:
+        """Predicted labels in {-1, +1}: (T, n) for (T, n, p) inputs."""
         return jnp.sign(self.decision(X))
 
     def risks(self, X_test, y_test) -> jnp.ndarray:
@@ -286,6 +353,7 @@ class CSVM:
                         axis=-1)
 
     def global_risks(self, X_test, y_test) -> np.ndarray:
+        """(T,) risks as numpy — already network-global (pooled model)."""
         return np.asarray(self.risks(X_test, y_test))
 
     def residuals(self) -> Tuple[jnp.ndarray, jnp.ndarray]:

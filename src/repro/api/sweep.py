@@ -125,7 +125,10 @@ def sweep_fit(X, y, cfgs: Sequence, mask=None, adj=None, *,
     config s-1's final state) instead of independently.  ``backend``
     "vmap" (default) or "shard_map" (``backend_options``: mesh /
     sweep_axis / node_axis / topology) — tiles the config axis across
-    devices; histories are a vmap-backend feature.
+    devices; histories are a vmap-backend feature.  ``base.budget``
+    (``PlanBudget``) streams the stacked (S, V, T, N, N) Gram build
+    through bounded row panels — the sweep's K is S times a single
+    fit's, so large grids hit memory first (API.md §scale).
     """
     base, cfgs = _split_grid(cfgs, base)
     prob = core.make_problem(
@@ -133,7 +136,8 @@ def sweep_fit(X, y, cfgs: Sequence, mask=None, adj=None, *,
         eta1=base.eta1, eta2=base.eta2, box_scale=base.box_scale,
         active=active, couple=couple)
     plan = sweep_lib.compile_sweep(prob, cfgs, qp_iters=base.qp_iters,
-                                   qp_solver=base.qp_solver)
+                                   qp_solver=base.qp_solver,
+                                   budget=base.budget)
     eval_fn = None
     if X_test is not None:
         eval_fn = evaluate.risk_eval_fn(prob.X.shape[0], X_test, y_test)

@@ -60,7 +60,7 @@ def _nbr_reduce_for(adjf, *, axis: str, topology: str):
 
 def _shard_run(state, prob, adj_rows, active_global, *, axis: str,
                topology: str, qp_iters: int, iters: int,
-               qp_solver: str = "fista"):
+               qp_solver: str = "fista", budget=None):
     """``iters`` planned ADMM iterations on (V_local, ...) shards inside
     shard_map: invariants compile once per node, then the light
     ``engine.plan_step`` body scans — never rebuilding the Hessian."""
@@ -70,7 +70,8 @@ def _shard_run(state, prob, adj_rows, active_global, *, axis: str,
     adjf = adj_rows.astype(jnp.float32)                      # (Vl, V)
     nbr_reduce = _nbr_reduce_for(adjf, axis=axis, topology=topology)
     nbr_counts = jnp.einsum("vu,ut->vt", adjf, active_global)
-    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts)
+    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts,
+                                     budget=budget)
 
     def body(st, _):
         st = engine_plan.plan_step(prob, inv, st, qp_iters=qp_iters,
@@ -102,7 +103,7 @@ def _node_specs(axis: str):
 
 def build_runner(mesh: Mesh, *, axis: str = "nodes",
                  topology: str = "graph", qp_iters: int = 200,
-                 iters: int = 1, qp_solver: str = "fista"):
+                 iters: int = 1, qp_solver: str = "fista", budget=None):
     """A reusable jitted ``run(state, prob) -> state`` executing ``iters``
     decentralized ADMM iterations on ``mesh`` (invariants compiled once
     per call inside the shard).
@@ -123,7 +124,7 @@ def build_runner(mesh: Mesh, *, axis: str = "nodes",
     def run_shard(st, pr, adj_r, act_g):
         return _shard_run(st, pr, adj_r, act_g, axis=axis,
                           topology=topology, qp_iters=qp_iters,
-                          iters=iters, qp_solver=qp_solver)
+                          iters=iters, qp_solver=qp_solver, budget=budget)
 
     @jax.jit
     def run(st, pr):
@@ -135,7 +136,8 @@ def build_runner(mesh: Mesh, *, axis: str = "nodes",
 
 def build_planned_runner(mesh: Mesh, *, axis: str = "nodes",
                          topology: str = "graph", qp_iters: int = 200,
-                         iters: int = 1, qp_solver: str = "fista"):
+                         iters: int = 1, qp_solver: str = "fista",
+                         budget=None):
     """Two-phase decentralized execution: ``(compile_fn, step_fn)``.
 
     ``inv = compile_fn(prob)`` builds the node-sharded plan invariants
@@ -155,7 +157,8 @@ def build_planned_runner(mesh: Mesh, *, axis: str = "nodes",
     def compile_shard(pr, adj_r, act_g):
         adjf = adj_r.astype(jnp.float32)
         nbr_counts = jnp.einsum("vu,ut->vt", adjf, act_g)
-        return inv_lib.compute_invariants(pr, nbr_counts=nbr_counts)
+        return inv_lib.compute_invariants(pr, nbr_counts=nbr_counts,
+                                          budget=budget)
 
     @functools.partial(
         compat.shard_map, mesh=mesh,
@@ -189,7 +192,7 @@ def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
                    mesh: Optional[Mesh] = None, axis: str = "nodes",
                    topology: str = "graph", qp_iters: int = 200,
                    state: Optional[dtsvm.DTSVMState] = None,
-                   qp_solver: str = "fista"):
+                   qp_solver: str = "fista", budget=None):
     """Decentralized run.  Shards every (V, ...) array over the node axis."""
     V = prob.X.shape[0]
     if mesh is None:
@@ -197,5 +200,6 @@ def run_dtsvm_dist(prob: dtsvm.DTSVMProblem, iters: int,
     if state is None:
         state = dtsvm.init_state(prob)
     run = build_runner(mesh, axis=axis, topology=topology,
-                       qp_iters=qp_iters, iters=iters, qp_solver=qp_solver)
+                       qp_iters=qp_iters, iters=iters, qp_solver=qp_solver,
+                       budget=budget)
     return run(state, prob)

@@ -215,6 +215,71 @@ def cache_specs(specs, mesh, global_batch: int):
 
 
 # ---------------------------------------------------------------------------
+# sample-axis sharding (the SVM engine's large-n path)
+# ---------------------------------------------------------------------------
+# A node's local training samples (the N axis of the (V, T, N, p) problem
+# tensor) split across devices: each device owns a row panel of every
+# (v, t) Gram matrix — K[rows, :] built from its Z rows against the
+# gathered full Z — so per-device Gram memory is N*N/S instead of N*N.
+# Consumed by the ``"sample_shard"`` backend (repro.api.backends).
+
+def largest_divisor_leq(n: int, cap: int) -> int:
+    """Largest divisor of ``n`` that is <= ``cap`` (>= 1) — the shared
+    even-tiling helper behind the sweep and sample meshes."""
+    for d in range(min(n, max(cap, 1)), 1, -1):
+        if n % d == 0:
+            return d
+    return 1
+
+
+def make_sample_mesh(n_samples: int, n_shards: Optional[int] = None, *,
+                     axis: str = "samples"):
+    """A 1-D mesh splitting the per-node sample axis across devices.
+
+    Parameters
+    ----------
+    n_samples : int
+        The padded per-(v,t) sample count N (must tile evenly).
+    n_shards : int, optional
+        Devices to use; default: the largest divisor of ``n_samples``
+        that fits the available devices.
+    axis : str
+        Mesh axis name (default ``"samples"``).
+    """
+    n_dev = len(jax.devices())
+    if n_shards is None:
+        n_shards = largest_divisor_leq(n_samples, n_dev)
+    if n_shards > n_dev:
+        raise ValueError(f"need {n_shards} devices, have {n_dev}")
+    if n_samples % n_shards:
+        raise ValueError(f"{n_samples} samples do not tile evenly over "
+                         f"{n_shards} '{axis}' devices")
+    devs = np.asarray(jax.devices()[:n_shards])
+    return jax.sharding.Mesh(devs, (axis,))
+
+
+def sample_specs(axis: str = "samples"):
+    """PartitionSpec trees for the sample-sharded DTSVM step.
+
+    Returns ``(prob_spec, state_spec)``: every leaf with an N axis
+    (``X``, ``y``, ``mask``, ``lam``) splits over ``axis``; the graph,
+    the scalar hyper-parameters, the membership masks and the
+    (V, T, 2p+2)-sized consensus state stay replicated (they are
+    O(p)-sized — the N² Gram panels are the only large objects, and
+    they never leave their shard).
+    """
+    from repro.core import dtsvm as core
+
+    rows = P(None, None, axis)
+    prob_spec = core.DTSVMProblem(
+        X=P(None, None, axis, None), y=rows, mask=rows, adj=P(),
+        C=P(), eps1=P(), eps2=P(), eta1=P(), eta2=P(), box_scale=P(),
+        active=P(), couple=P())
+    state_spec = core.DTSVMState(r=P(), alpha=P(), beta=P(), lam=rows)
+    return prob_spec, state_spec
+
+
+# ---------------------------------------------------------------------------
 # NamedSharding builder
 # ---------------------------------------------------------------------------
 def named(mesh, spec_tree):

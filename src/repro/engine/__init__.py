@@ -11,11 +11,16 @@ Session, and the batched sweep compiler (``engine.sweep``):
     splan = compile_sweep(prob, cfgs)      # S configs, ONE shared Z build
     states, hist = splan.run(iters=60)     # the whole grid, one vmapped scan
 
+Large-n scale path: ``PlanBudget(max_elems=... | tile=...)`` on either
+compiler streams the K build through bounded row panels — bitwise
+identical to the dense build (API.md §scale, ``engine.invariants``).
+
 See ``engine.plan`` / ``engine.sweep`` for the full story.
 """
 from repro.engine import qp_engines, sweep
-from repro.engine.invariants import (PlanInvariants, compute_invariants,
-                                     compute_z, update_invariants)
+from repro.engine.invariants import (PlanBudget, PlanInvariants,
+                                     compute_invariants, compute_z,
+                                     gram_and_lipschitz, update_invariants)
 from repro.engine.plan import DEFAULT_QP_SOLVER, Plan, compile_problem, \
     plan_step
 from repro.engine.sweep import SweepPlan, compile_sweep, make_sweep_mesh, \
@@ -24,12 +29,14 @@ from repro.engine.sweep import SweepPlan, compile_sweep, make_sweep_mesh, \
 __all__ = [
     "DEFAULT_QP_SOLVER",
     "Plan",
+    "PlanBudget",
     "PlanInvariants",
     "SweepPlan",
     "compile_problem",
     "compile_sweep",
     "compute_invariants",
     "compute_z",
+    "gram_and_lipschitz",
     "make_sweep_mesh",
     "per_config_problems",
     "plan_step",

@@ -19,17 +19,73 @@ the *incremental* host-side path behind the online Session: a change to
 ``active``/``couple`` recomputes counts/u/a/hi (cheap) and only the K
 slices whose ``a`` row actually changed — untouched (v,t) reuse their
 Gram block bit-for-bit.
+
+Large-n scale path: the dense K build holds two K-sized buffers live at
+once (the batched matmul output plus the |K| temporary of the
+Gershgorin pass).  A ``PlanBudget`` caps that: ``gram_and_lipschitz``
+streams K row-panel by row-panel (``kernels.ops.weighted_gram_rows``)
+into a single preallocated buffer, folding the Gershgorin row sums into
+the same pass — transient workspace ``chunk * N`` elements instead of a
+second full K.  Streamed and dense builds are bitwise identical (each
+K element reduces over the same D terms in the same order; row-sum /
+max reductions are exact) — tests/test_scale.py asserts this, including
+under ``REPRO_USE_PALLAS=1``.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dtsvm as core
 from repro.core import qp as qp_lib
 from repro.kernels import ops as kops
+
+
+class PlanBudget(NamedTuple):
+    """Memory budget for the invariant (Gram) build.
+
+    Parameters
+    ----------
+    max_elems : int, optional
+        Cap on the float32 elements of Gram workspace computed per
+        streamed step.  The build streams K in row panels of
+        ``chunk = max_elems // (batch * N)`` rows (rounded down to a
+        multiple of 8, floor 8), so the transient footprint is one K
+        buffer plus one ``batch * chunk * N`` panel — instead of the
+        dense build's two full K-sized buffers.  A budget large enough
+        to hold the whole build (``>= batch * N * N``) falls back to
+        the dense path.
+    tile : (int, int), optional
+        Explicit ``(tile_m, tile_n)`` output tiling for the Pallas Gram
+        kernel (aligned to the TPU (8, 128) layout grid — see
+        ``kernels.gram.align_tile``).  Without ``max_elems``, ``tile_m``
+        doubles as the streaming row-chunk size.  Tiling never changes
+        results (bitwise) — it is a layout/memory knob only.
+
+    Select per fit via ``SolverConfig(budget=PlanBudget(...))`` or pass
+    directly to ``engine.compile_problem`` / ``engine.compile_sweep``.
+    """
+    max_elems: Optional[int] = None
+    tile: Optional[Tuple[int, int]] = None
+
+    def row_chunk(self, batch: int, n: int,
+                  cols: Optional[int] = None) -> Optional[int]:
+        """Rows of K streamed per step for a ``(batch, n, cols)`` build
+        (``cols`` defaults to ``n`` — the square case) — or None when
+        the budget doesn't bind (dense build)."""
+        if self.max_elems is not None:
+            per_row = max(int(batch) * int(cols if cols is not None
+                                           else n), 1)
+            chunk = max((int(self.max_elems) // per_row) // 8 * 8, 8)
+        elif self.tile is not None:
+            chunk = max(int(self.tile[0]) // 8 * 8, 8)
+        else:
+            return None
+        return None if chunk >= n else chunk
 
 
 class PlanInvariants(NamedTuple):
@@ -54,6 +110,92 @@ def _masks_part(prob: core.DTSVMProblem,
     return ntp, nbr, u, a, hi
 
 
+def streamed_gram_panel(Zm: jnp.ndarray, a: jnp.ndarray, Zn: jnp.ndarray,
+                        chunk: int, tile=None
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """K = Zm diag(a) Zn^T built ``chunk`` rows at a time, plus the
+    per-row |K| sums (the Gershgorin ingredients) from the same pass.
+
+    Zm: (..., M, D) row panel, Zn: (..., N, D), a: (..., D) ->
+    ``(K (..., M, N), rowsums (..., M))``.  The row chunks write into
+    one preallocated K via in-place loop carries, so the live set is K
+    plus a single (batch, chunk, N) slab — the dense build's second
+    K-sized |K| temporary never exists.  The loop runs as ONE jitted
+    XLA while op (eager per-chunk dispatch would double-buffer the K
+    carry and pay a K-sized copy per chunk).  A trailing chunk that
+    would overrun clamps its start and recomputes a few rows —
+    identical values rewritten, so the result stays bitwise equal to
+    the dense build.  ``streamed_gram_panel(Z, a, Z, ...)`` is the
+    square case; the sample-sharded backend streams its per-device row
+    panel.
+    """
+    # the Pallas on/off decision is read at trace time inside
+    # weighted_gram_rows — key the jit cache on it so an env flip
+    # between calls cannot hit a stale entry
+    return _streamed_gram_jit(Zm, a, Zn, chunk=int(chunk),
+                              tile=None if tile is None else tuple(tile),
+                              _pallas=kops._use_pallas())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "tile", "_pallas"))
+def _streamed_gram_jit(Zm, a, Zn, *, chunk, tile, _pallas):
+    batch = Zm.shape[:-2]
+    M, D = Zm.shape[-2:]
+    N = Zn.shape[-2]
+    Zmf = Zm.reshape((-1, M, D))
+    Znf = Zn.reshape((-1, N, D))
+    af = a.reshape((-1, D))
+    B = Zmf.shape[0]
+    chunk = min(chunk, M)
+    nc = -(-M // chunk)
+    K0 = jnp.zeros((B, M, N), jnp.float32)
+    rs0 = jnp.zeros((B, M), jnp.float32)
+
+    def body(i, carry):
+        K, rs = carry
+        b = i // nc
+        start = jnp.minimum((i % nc) * chunk, M - chunk)
+        zm = jax.lax.dynamic_slice(Zmf, (b, 0, 0), (1, M, D))[0]
+        zn = jax.lax.dynamic_slice(Znf, (b, 0, 0), (1, N, D))[0]
+        ab = jax.lax.dynamic_slice(af, (b, 0), (1, D))[0]
+        zrows = jax.lax.dynamic_slice(zm, (start, 0), (chunk, D))
+        Kc = kops.weighted_gram_rows(zrows, ab, zn, tile=tile)
+        rc = jnp.sum(jnp.abs(Kc), axis=-1)
+        K = jax.lax.dynamic_update_slice(K, Kc[None], (b, start, 0))
+        rs = jax.lax.dynamic_update_slice(rs, rc[None], (b, start))
+        return K, rs
+
+    K, rs = jax.lax.fori_loop(0, B * nc, body, (K0, rs0))
+    return K.reshape(batch + (M, N)), rs.reshape(batch + (M,))
+
+
+def gram_and_lipschitz(Z: jnp.ndarray, a: jnp.ndarray,
+                       budget: Optional[PlanBudget] = None
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The dual Hessian K = Z diag(a) Z^T and its Gershgorin bound L.
+
+    Z: (..., N, D); ``a`` may carry extra leading batch dims (the
+    sweep's shared-Z case) — Z broadcasts up.  Without a binding
+    ``budget`` this is the dense pair (one batched ``weighted_gram``
+    call, then ``gershgorin_lipschitz``); with one, K streams through
+    bounded row panels (see ``_streamed_gram``).  Both paths are
+    bitwise identical.
+    """
+    extra = (a.ndim - 1) - (Z.ndim - 2)
+    if extra > 0:
+        Z = jnp.broadcast_to(Z, a.shape[:-1] + Z.shape[-2:])
+    if budget is not None:
+        batch = Z.shape[:-2]
+        B = int(np.prod(batch, dtype=np.int64)) if batch else 1
+        chunk = budget.row_chunk(B, Z.shape[-2])
+        if chunk is not None:
+            K, rs = streamed_gram_panel(Z, a, Z, chunk, budget.tile)
+            return K, jnp.maximum(jnp.max(rs, axis=-1), 1e-12)
+    tile = None if budget is None else budget.tile
+    K = kops.weighted_gram(Z, a, tile=tile)
+    return K, qp_lib.gershgorin_lipschitz(K)
+
+
 def compute_z(prob: core.DTSVMProblem) -> jnp.ndarray:
     """The label-signed augmented data Z = Y [X, 1] (mask-zeroed).
 
@@ -70,22 +212,26 @@ def compute_z(prob: core.DTSVMProblem) -> jnp.ndarray:
 
 def compute_invariants(prob: core.DTSVMProblem, *,
                        nbr_counts: Optional[jnp.ndarray] = None,
-                       Z: Optional[jnp.ndarray] = None) -> PlanInvariants:
+                       Z: Optional[jnp.ndarray] = None,
+                       budget: Optional[PlanBudget] = None
+                       ) -> PlanInvariants:
     """All loop-invariants of Prop. 1, from scratch.  Pure jnp.
 
     ``Z`` may be passed in when the caller already holds it (the sweep
-    compiler shares one Z across its whole config axis).
+    compiler shares one Z across its whole config axis).  ``budget``
+    streams the K build through bounded row panels (bitwise identical
+    to the dense build — see ``gram_and_lipschitz``).
     """
     ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
     if Z is None:
         Z = compute_z(prob)
-    K = kops.weighted_gram(Z, a)
-    L = qp_lib.gershgorin_lipschitz(K)
+    K, L = gram_and_lipschitz(Z, a, budget)
     return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi, L=L)
 
 
 def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,
-                      active=None, couple=None
+                      active=None, couple=None,
+                      budget: Optional[PlanBudget] = None
                       ) -> Tuple[core.DTSVMProblem, PlanInvariants, int]:
     """Incrementally re-plan after a membership change (host-side only).
 
@@ -93,7 +239,9 @@ def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,
     is the number of (v,t) Gram slices that had to be rebuilt; the other
     ``V*T - n`` slices are reused unchanged (bit-for-bit — a Gram block
     depends only on Z, which membership events never touch, and its own
-    ``a`` row).
+    ``a`` row).  ``budget`` streams the rebuilt slices through bounded
+    row panels, so an online membership event at large n never
+    materializes more Gram workspace than the original budgeted build.
     """
     new_prob = prob
     if active is not None:
@@ -108,13 +256,13 @@ def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,
     if n == 0:
         K, L = inv.K, inv.L
     elif n == changed.size:
-        K = kops.weighted_gram(inv.Z, a)
-        L = qp_lib.gershgorin_lipschitz(K)
+        K, L = gram_and_lipschitz(inv.Z, a, budget)
     else:
         iv, it = np.nonzero(changed)
-        K_sub = kops.weighted_gram(inv.Z[iv, it], a[iv, it])        # (n,N,N)
+        K_sub, L_sub = gram_and_lipschitz(inv.Z[iv, it], a[iv, it],
+                                          budget)                   # (n,N,N)
         K = inv.K.at[iv, it].set(K_sub)
-        L = inv.L.at[iv, it].set(qp_lib.gershgorin_lipschitz(K_sub))
+        L = inv.L.at[iv, it].set(L_sub)
     new_inv = PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=inv.Z, K=K,
                              hi=hi, L=L)
     return new_prob, new_inv, n

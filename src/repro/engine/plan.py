@@ -36,6 +36,36 @@ from repro.engine import qp_engines
 DEFAULT_QP_SOLVER = "fista"
 
 
+def consensus_update(prob: core.DTSVMProblem, state: core.DTSVMState,
+                     u, ntp, nbr, f, zl, nbr_reduce: Callable):
+    """Eqs. (7)-(9): the post-dual-solve primal/multiplier updates.
+
+    ``zl = X^T Y lam`` (V, T, p+1) summarizes the dual solve; everything
+    else is precomputed invariants plus the carried state.  Returns
+    ``(r_new, alpha, beta)``.  Shared by ``plan_step`` and the
+    sample-sharded backend (whose duals live on row panels but whose
+    consensus math is replicated) — one copy of ops that must stay
+    bitwise-identical across execution paths.
+    """
+    p = prob.X.shape[-1]
+    rhs = jnp.concatenate([zl, zl], axis=-1) - f               # [I,I]^T(..)-f
+    r_new = rhs / u                                            # eq. (7)
+    act = prob.active[..., None]
+    r_new = r_new * act + state.r * (1.0 - act)                # freeze
+
+    # eq. (8): alpha update on the (w0, b0) block, coupled nodes only
+    r_act = r_new * act
+    task_sum = jnp.sum(r_act, axis=1, keepdims=True) - r_act
+    d_alpha = (ntp[..., None] * r_new - task_sum * prob.couple[:, None, None])
+    alpha = state.alpha + 0.5 * prob.eta1 * d_alpha[..., : p + 1] * act
+
+    # eq. (9): beta update over active neighbors
+    nbr_sum = nbr_reduce(r_act)
+    d_beta = nbr[..., None] * r_new - nbr_sum
+    beta = state.beta + 0.5 * prob.eta2 * d_beta * act
+    return r_new, alpha, beta
+
+
 def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
               state: core.DTSVMState, *, qp_iters: int = 200,
               qp_solver: str = DEFAULT_QP_SOLVER,
@@ -60,22 +90,8 @@ def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
                                     iters=qp_iters, L=inv.L)   # eq. (6)
 
     zl = jnp.einsum("vtn,vtnd->vtd", lam, Z)                   # X^T Y lam
-    rhs = jnp.concatenate([zl, zl], axis=-1) - f               # [I,I]^T(..)-f
-    r_new = rhs / u                                            # eq. (7)
-    act = prob.active[..., None]
-    r_new = r_new * act + state.r * (1.0 - act)                # freeze
-
-    # eq. (8): alpha update on the (w0, b0) block, coupled nodes only
-    r_act = r_new * act
-    task_sum = jnp.sum(r_act, axis=1, keepdims=True) - r_act
-    d_alpha = (ntp[..., None] * r_new - task_sum * prob.couple[:, None, None])
-    alpha = state.alpha + 0.5 * prob.eta1 * d_alpha[..., : p + 1] * act
-
-    # eq. (9): beta update over active neighbors
-    nbr_sum = nbr_reduce(r_act)
-    d_beta = nbr[..., None] * r_new - nbr_sum
-    beta = state.beta + 0.5 * prob.eta2 * d_beta * act
-
+    r_new, alpha, beta = consensus_update(prob, state, u, ntp, nbr, f, zl,
+                                          nbr_reduce)
     return core.DTSVMState(r=r_new, alpha=alpha, beta=beta, lam=lam)
 
 
@@ -92,11 +108,13 @@ class Plan:
                  inv: inv_lib.PlanInvariants, *, qp_iters: int = 200,
                  qp_solver: str = DEFAULT_QP_SOLVER,
                  nbr_reduce: Optional[Callable] = None,
+                 budget: Optional[inv_lib.PlanBudget] = None,
                  stats: Optional[dict] = None):
         self.prob = prob
         self.inv = inv
         self.qp_iters = qp_iters
         self.qp_solver = qp_solver
+        self.budget = budget
         self._nbr_reduce = nbr_reduce
         V, T = prob.X.shape[:2]
         self.stats = stats if stats is not None else {
@@ -135,9 +153,12 @@ class Plan:
     def replan(self, *, active=None, couple=None) -> "Plan":
         """A new Plan for changed membership masks, reusing every
         invariant the change does not touch (host-side; see
-        ``invariants.update_invariants``)."""
+        ``invariants.update_invariants``).  The plan's ``budget``
+        carries over, so rebuilt K slices stream through the same
+        bounded row panels as the original build."""
         prob, inv, n = inv_lib.update_invariants(
-            self.prob, self.inv, active=active, couple=couple)
+            self.prob, self.inv, active=active, couple=couple,
+            budget=self.budget)
         V, T = prob.X.shape[:2]
         stats = dict(self.stats)
         stats["replans"] += 1
@@ -145,26 +166,54 @@ class Plan:
         stats["gram_slices_reused"] += V * T - n
         return Plan(prob, inv, qp_iters=self.qp_iters,
                     qp_solver=self.qp_solver, nbr_reduce=self._nbr_reduce,
-                    stats=stats)
+                    budget=self.budget, stats=stats)
 
 
 def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
                     qp_iters: Optional[int] = None,
                     qp_solver: Optional[str] = None,
                     nbr_reduce: Optional[Callable] = None,
-                    nbr_counts=None) -> Plan:
+                    nbr_counts=None,
+                    budget: Optional[inv_lib.PlanBudget] = None) -> Plan:
     """Precompute every loop-invariant of Prop. 1 into a ``Plan``.
 
-    ``cfg`` may be any object with ``qp_iters`` / ``qp_solver``
-    attributes (e.g. ``repro.api.SolverConfig``); explicit keywords
-    override it.  Pure jnp — safe to call under jit (the incremental
-    ``Plan.replan`` is the only host-side part of the engine).
+    Parameters
+    ----------
+    prob : core.DTSVMProblem
+        The problem to compile (data/graph/masks/hyper-parameters).
+    cfg : object, optional
+        Any object with ``qp_iters`` / ``qp_solver`` / ``budget``
+        attributes (e.g. ``repro.api.SolverConfig``); explicit keywords
+        override it.
+    qp_iters : int, optional
+        Inner box-QP iterations per ADMM step (default 200).
+    qp_solver : str, optional
+        QP engine name (``"fista" | "pg" | "pallas_fused"``).
+    nbr_reduce : callable, optional
+        Neighbor-sum hook for SPMD execution.
+    nbr_counts : jnp.ndarray, optional
+        Precomputed (V, T) active-neighbor counts (SPMD shards pass
+        their collective counts).
+    budget : invariants.PlanBudget, optional
+        Memory budget for the K build: streams the Gram construction
+        through bounded row panels instead of one batched matmul —
+        bitwise identical to the dense build (the large-n scale path).
+
+    Returns
+    -------
+    Plan
+        Compiled invariants plus the light per-iteration body.  Pure
+        jnp — safe to call under jit (the incremental ``Plan.replan``
+        is the only host-side part of the engine).
     """
     if qp_iters is None:
         qp_iters = getattr(cfg, "qp_iters", 200)
     if qp_solver is None:
         qp_solver = getattr(cfg, "qp_solver", DEFAULT_QP_SOLVER)
+    if budget is None:
+        budget = getattr(cfg, "budget", None)
     qp_engines.get(qp_solver)        # fail fast on unknown engines
-    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts)
+    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts,
+                                     budget=budget)
     return Plan(prob, inv, qp_iters=qp_iters, qp_solver=qp_solver,
-                nbr_reduce=nbr_reduce)
+                nbr_reduce=nbr_reduce, budget=budget)

@@ -43,11 +43,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import dtsvm as core
-from repro.core import qp as qp_lib
 from repro.engine import invariants as inv_lib
 from repro.engine import qp_engines
 from repro.engine.plan import DEFAULT_QP_SOLVER, Plan, plan_step
-from repro.kernels import ops as kops
 
 # Hyper-parameters a config may override (everything in DTSVMProblem that
 # is a scalar); ``active`` / ``couple`` masks may also vary per config.
@@ -142,7 +140,8 @@ class SweepPlan:
 
     def __init__(self, base: core.DTSVMProblem, prob: core.DTSVMProblem,
                  inv: inv_lib.PlanInvariants, config_problems: list, *,
-                 qp_iters: int = 200, qp_solver: str = DEFAULT_QP_SOLVER):
+                 qp_iters: int = 200, qp_solver: str = DEFAULT_QP_SOLVER,
+                 budget: Optional[inv_lib.PlanBudget] = None):
         self.base = base
         self.prob = prob
         self.inv = inv
@@ -150,6 +149,7 @@ class SweepPlan:
         self.n_configs = len(config_problems)
         self.qp_iters = qp_iters
         self.qp_solver = qp_solver
+        self.budget = budget
 
     # -- execution (single host, vmapped) ----------------------------------
     def init_state(self) -> core.DTSVMState:
@@ -323,15 +323,7 @@ class SweepPlan:
             getattr(self.inv, k) if k == "Z" else getattr(self.inv, k)[s]
             for k in inv_lib.PlanInvariants._fields])
         return Plan(self.config_problems[s], iv, qp_iters=self.qp_iters,
-                    qp_solver=self.qp_solver)
-
-
-def _largest_divisor_leq(n: int, cap: int) -> int:
-    """Largest divisor of ``n`` that is <= ``cap`` (>= 1)."""
-    for d in range(min(n, max(cap, 1)), 1, -1):
-        if n % d == 0:
-            return d
-    return 1
+                    qp_solver=self.qp_solver, budget=self.budget)
 
 
 def make_sweep_mesh(n_configs: int, n_nodes: Optional[int] = None, *,
@@ -341,12 +333,14 @@ def make_sweep_mesh(n_configs: int, n_nodes: Optional[int] = None, *,
     takes the largest divisor of ``n_configs`` that fits the device
     budget, so configs always tile evenly over as many devices as
     possible."""
+    from repro.dist.sharding import largest_divisor_leq
+
     n_dev = len(jax.devices())
     if n_nodes is None:
-        n_sweep = _largest_divisor_leq(n_configs, n_dev)
+        n_sweep = largest_divisor_leq(n_configs, n_dev)
         devs = np.asarray(jax.devices()[:n_sweep])
         return jax.sharding.Mesh(devs, (sweep_axis,))
-    n_sweep = _largest_divisor_leq(n_configs, n_dev // n_nodes)
+    n_sweep = largest_divisor_leq(n_configs, n_dev // n_nodes)
     need = n_sweep * n_nodes
     if n_dev < need:
         raise ValueError(f"need {need} devices, have {n_dev}")
@@ -357,17 +351,38 @@ def make_sweep_mesh(n_configs: int, n_nodes: Optional[int] = None, *,
 def compile_sweep(prob: core.DTSVMProblem, cfgs: Sequence, *,
                   qp_iters: Optional[int] = None,
                   qp_solver: Optional[str] = None,
-                  nbr_counts: Optional[jnp.ndarray] = None) -> SweepPlan:
+                  nbr_counts: Optional[jnp.ndarray] = None,
+                  budget: Optional[inv_lib.PlanBudget] = None) -> SweepPlan:
     """Compile S hyper-parameter configs over ``prob``'s data into one
     batched ``SweepPlan``.
 
-    ``cfgs``: a sequence of override mappings (keys among
-    ``SWEEP_FIELDS`` + ``active``/``couple``) or SolverConfig-like
-    objects.  Statics (``qp_iters``, ``qp_solver``) must agree across the
-    grid.  The shared Z is built once; u/a/counts/box are stacked from
-    the exact host-side per-config arithmetic the serial path performs
-    (keeping results bitwise identical), and the Gram re-weighting runs
-    as one batched ``weighted_gram`` over the stacked a-diagonal.
+    Parameters
+    ----------
+    prob : core.DTSVMProblem
+        The base problem whose data/graph every config shares.
+    cfgs : sequence
+        Override mappings (keys among ``SWEEP_FIELDS`` +
+        ``active``/``couple``) or SolverConfig-like objects.  Statics
+        (``qp_iters``, ``qp_solver``) must agree across the grid.
+    qp_iters, qp_solver : optional
+        Explicit statics for the whole sweep (resolved against the
+        configs by ``_check_static``).
+    nbr_counts : jnp.ndarray, optional
+        Precomputed (V, T) active-neighbor counts.
+    budget : invariants.PlanBudget, optional
+        Memory budget for the stacked (S, V, T, N, N) Gram build — the
+        sweep's K is S times the single-fit K, so this is where the
+        dense build runs out of memory first.  Streaming is bitwise
+        identical to the dense batched call.
+
+    Returns
+    -------
+    SweepPlan
+        The shared Z is built once; u/a/counts/box are stacked from the
+        exact host-side per-config arithmetic the serial path performs
+        (keeping results bitwise identical), and the Gram re-weighting
+        runs as one batched ``weighted_gram`` over the stacked
+        a-diagonal (or as budgeted row panels).
     """
     qp_iters, qp_solver = _check_static(cfgs, qp_iters, qp_solver)
     qp_engines.get(qp_solver)            # fail fast on unknown engines
@@ -377,8 +392,7 @@ def compile_sweep(prob: core.DTSVMProblem, cfgs: Sequence, *,
     parts = [inv_lib._masks_part(pc, nbr_counts) for pc in probs]
     ntp, nbr, u, a, hi = (jnp.stack([p[i] for p in parts])
                           for i in range(5))
-    K = kops.weighted_gram(Z, a)           # ONE batched call, Z shared
-    L = qp_lib.gershgorin_lipschitz(K)
+    K, L = inv_lib.gram_and_lipschitz(Z, a, budget)   # Z shared under a
     inv = inv_lib.PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K,
                                  hi=hi, L=L)
 
@@ -391,4 +405,4 @@ def compile_sweep(prob: core.DTSVMProblem, cfgs: Sequence, *,
         active=jnp.stack([pc.active for pc in probs]),
         couple=jnp.stack([pc.couple for pc in probs]))
     return SweepPlan(prob, sweep_prob, inv, probs, qp_iters=qp_iters,
-                     qp_solver=qp_solver)
+                     qp_solver=qp_solver, budget=budget)

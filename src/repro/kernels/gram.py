@@ -10,6 +10,24 @@ to the 128-lane width by the wrapper in ``ops.py``.
 Grid: (N/BN, N/BN).  VMEM per step: 2*BN*D + BN*BN floats — with BN=256 and
 D=128 that is ~0.5 MB, far under the ~16 MB v5e VMEM budget, so the block
 size is MXU-bound, not VMEM-bound.
+
+``weighted_gram_tiled`` is the large-n generalization: a RECTANGULAR
+block K[m, n] = sum_d Zm[m,d] a[d] Zn[n,d] over an explicit
+``(tile_m, tile_n)`` output grid.  It serves two callers:
+
+- the streamed invariant build (``engine.invariants`` under a
+  ``PlanBudget``), which computes K row-panel by row-panel so the build's
+  transient workspace stays bounded instead of one giant batched matmul;
+- the sample-sharded backend, where each device owns a row panel
+  K[rows, :] of its node's Gram matrix.
+
+Tile alignment follows the TPU layout constraints: ``tile_m`` rounds up
+to the 8-row sublane, ``tile_n`` to the 128-lane width.  Each grid step
+loads a (tile_m, D) and a (tile_n, D) panel and contracts the full
+(padded) feature dim on the MXU, so the per-element contraction order is
+independent of the tile choice — tiled outputs are bitwise identical to
+the square-kernel path (asserted against interpret mode in
+tests/test_scale.py).
 """
 from __future__ import annotations
 
@@ -20,6 +38,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 DEFAULT_BLOCK = 256
+DEFAULT_TILE = (256, 256)
 
 
 def _gram_kernel(zi_ref, zj_ref, a_ref, out_ref):
@@ -58,6 +77,54 @@ def weighted_gram_2d(Z: jnp.ndarray, a: jnp.ndarray, *,
         interpret=interpret,
     )(Zp, Zp, ap)
     return out[:N, :N]
+
+
+def align_tile(tile, m: int, n: int):
+    """Round a requested ``(tile_m, tile_n)`` to the TPU layout grid:
+    tile_m up to a multiple of 8 (sublanes), tile_n up to a multiple of
+    128 (lanes), each capped at the padded extent of its axis."""
+    tm, tn = tile
+    tm = min(_next_multiple(max(int(tm), 1), 8), _next_multiple(m, 8))
+    tn = min(_next_multiple(max(int(tn), 1), 128), _next_multiple(n, 128))
+    return tm, tn
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def weighted_gram_tiled(Zm: jnp.ndarray, a: jnp.ndarray,
+                        Zn: jnp.ndarray, *,
+                        tile=DEFAULT_TILE,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Rectangular weighted Gram block K = Zm diag(a) Zn^T, tiled.
+
+    Zm: (M, D) row panel, Zn: (N, D) column panel, a: (D,) ->  (M, N),
+    computed in ``(tile_m, tile_n)`` output blocks (aligned via
+    ``align_tile``).  ``weighted_gram_tiled(Z, a, Z)`` is the square
+    kernel; a row-panel call is one streamed chunk of the large-n build.
+    """
+    M, D = Zm.shape
+    N, _ = Zn.shape
+    tm, tn = align_tile(tile, M, N)
+    Mp = _next_multiple(M, tm)
+    Np = _next_multiple(N, tn)
+    Dp = _next_multiple(D, 128)
+    Zmp = jnp.pad(Zm, ((0, Mp - M), (0, Dp - D))).astype(jnp.float32)
+    Znp = jnp.pad(Zn, ((0, Np - N), (0, Dp - D))).astype(jnp.float32)
+    ap = jnp.pad(a, (0, Dp - D)).astype(jnp.float32)[None, :]    # (1, Dp)
+
+    grid = (Mp // tm, Np // tn)
+    out = pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tm, Dp), lambda i, j: (i, 0)),
+            pl.BlockSpec((tn, Dp), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, Dp), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        interpret=interpret,
+    )(Zmp, Znp, ap)
+    return out[:M, :N]
 
 
 def _next_multiple(x: int, m: int) -> int:

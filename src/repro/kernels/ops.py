@@ -40,20 +40,29 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray, *,
+                  tile=None) -> jnp.ndarray:
     """K = Z diag(a) Z^T over arbitrary leading batch dims.
 
     ``a`` may carry MORE leading dims than ``Z`` (the sweep engine's
     shared-Z case: one (V,T,N,D) data tensor re-weighted by an
     (S,V,T,D) stack of per-config diagonals) — Z is broadcast up to
-    ``a``'s batch."""
+    ``a``'s batch.  ``tile`` optionally selects an explicit
+    ``(tile_m, tile_n)`` output tiling for the Pallas kernel (the
+    ``PlanBudget.tile`` knob); tiled and square-kernel outputs are
+    bitwise identical, so this is a layout choice, not a numeric one."""
     extra = (a.ndim - 1) - (Z.ndim - 2)
     if extra > 0:
         Z = jnp.broadcast_to(Z, a.shape[:-1] + Z.shape[-2:])
     if not _use_pallas():
         return ref.weighted_gram(Z, a)
-    fn = lambda z2, a1: gram_kernel.weighted_gram_2d(
-        z2, a1, interpret=_interpret())
+    if tile is None:
+        fn = lambda z2, a1: gram_kernel.weighted_gram_2d(
+            z2, a1, interpret=_interpret())
+    else:
+        tile = tuple(tile)
+        fn = lambda z2, a1: gram_kernel.weighted_gram_tiled(
+            z2, a1, z2, tile=tile, interpret=_interpret())
     batch = Z.shape[:-2]
     if batch:
         flatZ = Z.reshape((-1,) + Z.shape[-2:])
@@ -61,6 +70,32 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
         out = jax.lax.map(lambda za: fn(*za), (flatZ, flata))
         return out.reshape(batch + out.shape[-2:])
     return fn(Z, a)
+
+
+def weighted_gram_rows(Zm: jnp.ndarray, a: jnp.ndarray, Zn: jnp.ndarray, *,
+                       tile=None) -> jnp.ndarray:
+    """Rectangular Gram block K = Zm diag(a) Zn^T over leading batch dims.
+
+    Zm: (..., M, D) row panel, Zn: (..., N, D), a: (..., D) ->
+    (..., M, N).  One streamed chunk of the large-n invariant build
+    (``engine.invariants`` under a ``PlanBudget``) and the per-device
+    panel of the sample-sharded backend.  Row panels are bitwise
+    identical to the matching rows of the dense ``weighted_gram`` on
+    both the jnp and the interpret-mode Pallas path (tests/test_scale).
+    ``tile``: ``(tile_m, tile_n)`` Pallas output tiling (default
+    ``kernels.gram.DEFAULT_TILE``)."""
+    if not _use_pallas():
+        return ref.weighted_gram_rows(Zm, a, Zn)
+    tile = gram_kernel.DEFAULT_TILE if tile is None else tuple(tile)
+    fn = lambda zm, a1, zn: gram_kernel.weighted_gram_tiled(
+        zm, a1, zn, tile=tile, interpret=_interpret())
+    batch = Zm.shape[:-2]
+    if batch:
+        flat = lambda x: x.reshape((-1,) + x.shape[len(batch):])
+        out = jax.lax.map(lambda args: fn(*args),
+                          (flat(Zm), flat(a), flat(Zn)))
+        return out.reshape(batch + out.shape[-2:])
+    return fn(Zm, a, Zn)
 
 
 def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:

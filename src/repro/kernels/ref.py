@@ -13,6 +13,21 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     return jnp.einsum("...nd,...d,...md->...nm", Z, a.astype(Z.dtype), Z)
 
 
+def weighted_gram_rows(Zm: jnp.ndarray, a: jnp.ndarray,
+                       Zn: jnp.ndarray) -> jnp.ndarray:
+    """Rectangular weighted Gram block K = Zm diag(a) Zn^T.
+
+    Zm: (..., M, D) row panel, Zn: (..., N, D), a: (..., D) ->
+    (..., M, N).  ``weighted_gram_rows(Z, a, Z)`` IS ``weighted_gram``;
+    a row-slice call computes the matching row panel of the full K with
+    the identical per-element contraction (the streamed large-n build
+    and the sample-sharded backend rely on this being bitwise — each
+    K[i, j] reduces over the same D terms in the same order regardless
+    of which panel it lands in).
+    """
+    return jnp.einsum("...nd,...d,...md->...nm", Zm, a.astype(Zm.dtype), Zn)
+
+
 def qp_pg_step(lam: jnp.ndarray, K: jnp.ndarray, q: jnp.ndarray,
                hi: jnp.ndarray, gamma) -> jnp.ndarray:
     """One projected-gradient ascent step of the box QP:

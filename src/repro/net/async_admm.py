@@ -99,11 +99,13 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
               qp_iters: int = 200, qp_solver: str = "fista",
               state: Optional[core.DTSVMState] = None,
               eval_fn: Optional[Callable] = None,
-              round0: int = 0) -> AsyncResult:
+              round0: int = 0, budget=None) -> AsyncResult:
     """Run ``iters`` asynchronous rounds of Prop. 1 over the fabric.
 
     ``net`` declares the communication model (default: identity — the
-    synchronous trajectory, now with byte metering).  ``plan`` /
+    synchronous trajectory, now with byte metering).  ``budget``
+    (``engine.PlanBudget``) streams the plan's K build through bounded
+    row panels when no prebuilt ``plan`` is given.  ``plan`` /
     ``fabric`` / ``fabric_state`` let callers carry compiled invariants
     and live mailboxes across calls (the OnlineSession path); ``round0``
     enters the schedule stream at that absolute round (and, when
@@ -113,7 +115,8 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
     net = net if net is not None else NetConfig()
     if plan is None:
         plan = engine_plan.compile_problem(prob, qp_iters=qp_iters,
-                                           qp_solver=qp_solver)
+                                           qp_solver=qp_solver,
+                                           budget=budget)
     if state is None:
         state = core.init_state(prob)
     V = prob.X.shape[0]

@@ -45,7 +45,24 @@ _QMAX = {2: 32767.0, 3: 127.0}           # code -> symmetric int range
 @dataclass(frozen=True)
 class LinkPolicy:
     """One directed link's behavior; the identity default is a perfect
-    synchronous wire (zero delay, no loss, float32, unmetered)."""
+    synchronous wire (zero delay, no loss, float32, unmetered).
+
+    Parameters
+    ----------
+    delay : int
+        Rounds between send and delivery (>= 0).
+    drop : float
+        I.i.d. per-round in-transit loss probability in [0, 1] (the
+        sender still pays the bytes).
+    quant : str
+        Wire format of each (2p+2)-float32 decision vector:
+        ``"float32" | "float16" | "int16" | "int8"`` — integer formats
+        use a symmetric per-vector scale (deterministic) and carry a
+        4-byte scale word.
+    bandwidth : float, optional
+        Sender-side bytes/round token bucket; a round whose credit
+        cannot cover the bundle skips the send (None = unlimited).
+    """
     delay: int = 0
     drop: float = 0.0
     quant: str = "float32"

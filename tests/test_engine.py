@@ -160,9 +160,9 @@ def test_weighted_gram_built_exactly_once_per_fit(monkeypatch):
     calls = {"n": 0}
     real = kops.weighted_gram
 
-    def counting(Z, a):
+    def counting(Z, a, **kw):
         calls["n"] += 1
-        return real(Z, a)
+        return real(Z, a, **kw)
 
     monkeypatch.setattr(kops, "weighted_gram", counting)
     data, A = _make()
@@ -374,9 +374,9 @@ def test_csvm_solver_single_dispatch(monkeypatch):
     calls = {"n": 0}
     real = kops.weighted_gram
 
-    def counting(Z, a):
+    def counting(Z, a, **kw):
         calls["n"] += 1
-        return real(Z, a)
+        return real(Z, a, **kw)
 
     monkeypatch.setattr(kops, "weighted_gram", counting)
     data, _ = _make(V=4, T=3, n=8)
