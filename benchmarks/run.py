@@ -23,6 +23,7 @@ def main() -> None:
 
     import bench_fit
     import bench_scale
+    import bench_serve
     import fig2_convergence
     import fig3_eps_sweep
     import fig4_c_sweep
@@ -41,6 +42,7 @@ def main() -> None:
         "fig7": fig7_online.main,
         "fit": bench_fit.main,
         "scale": bench_scale.main,
+        "serve": bench_serve.main,
         "kernels": kernels_bench.main,
         "roofline": lambda fast: roofline.main([]),
     }

@@ -42,6 +42,12 @@ neighbors' current variables before the next round (the Fig.-7 join
 story), metered separately as ``warmfill_msgs``.  The identity
 NetConfig reproduces the vmap session bitwise, stage for stage
 (tested); ``net_report_`` holds the cumulative byte accounting.
+
+Sessions are durable (``repro.store``): ``SessionStore.save`` snapshots
+the whole thing — state, masks, plan fingerprint, live fabric — and the
+restored session continues bitwise; ``OnlineSession(..., log=EventLog())``
+additionally records every constructor/membership/run decision so
+``repro.store.replay`` rebuilds the session from history alone.
 """
 from __future__ import annotations
 
@@ -78,7 +84,7 @@ class OnlineSession:
     def __init__(self, X, y, mask=None, adj=None, *,
                  config: Optional[SolverConfig] = None,
                  active=None, couple=None, X_test=None, y_test=None,
-                 jit: bool = False, **overrides):
+                 jit: bool = False, log=None, **overrides):
         self.config = _as_solver_config(config, overrides)
         self._X = jnp.asarray(X, jnp.float32)
         self._y = jnp.asarray(y, jnp.float32)
@@ -111,6 +117,23 @@ class OnlineSession:
             raise ValueError("jit=True is a vmap-session feature; the "
                              "async fabric already scans its rounds — "
                              "drop jit or the net config")
+        # event log (repro.store.events): duck-typed — anything with an
+        # append(event, **payload) method; the init record captures the
+        # constructor so replay() can rebuild the session from history
+        self._log = log
+        self._emit("init", X=self._X, y=self._y, mask=self._mask,
+                   adj=self._adj, config=self.config.to_dict(),
+                   active=self._active.copy(), couple=self._couple.copy(),
+                   jit=jit,
+                   X_test=None if X_test is None
+                   else np.asarray(X_test, np.float32),
+                   y_test=None if y_test is None
+                   else np.asarray(y_test, np.float32))
+
+    def _emit(self, event: str, **payload) -> None:
+        """Append one record to the session's event log, if any."""
+        if self._log is not None:
+            self._log.append(event, **payload)
 
     # ------------------------------------------------------------------
     # membership events
@@ -130,6 +153,8 @@ class OnlineSession:
         """Activate ``task`` at ``nodes`` (default: everywhere)."""
         self._active[_node_index(nodes, self.V), task] = 1.0
         self._masks_dirty = True
+        self._emit("add_task", task=int(task), nodes=None if nodes is None
+                   else [int(n) for n in nodes])
         return self
 
     def drop_task(self, task: int, nodes: Optional[Sequence[int]] = None
@@ -138,6 +163,8 @@ class OnlineSession:
         so the task re-enters later exactly where it left off."""
         self._active[_node_index(nodes, self.V), task] = 0.0
         self._masks_dirty = True
+        self._emit("drop_task", task=int(task), nodes=None if nodes is None
+                   else [int(n) for n in nodes])
         return self
 
     def set_active(self, active) -> "OnlineSession":
@@ -146,6 +173,7 @@ class OnlineSession:
         self._active = np.array(active, np.float32, copy=True).reshape(
             self.V, self.T)
         self._masks_dirty = True
+        self._emit("set_active", active=self._active.copy())
         return self
 
     def set_coupling(self, on: Union[bool, float, np.ndarray],
@@ -161,6 +189,11 @@ class OnlineSession:
                     "nodes=, not both")
             self._couple = np.array(on, np.float32, copy=True).reshape(self.V)
         self._masks_dirty = True
+        self._emit("set_coupling",
+                   on=float(on) if np.ndim(on) == 0
+                   else np.array(on, np.float32),
+                   nodes=None if nodes is None
+                   else [int(n) for n in nodes])
         return self
 
     # ------------------------------------------------------------------
@@ -230,6 +263,7 @@ class OnlineSession:
         cfg = self.config
         backend = self._effective_backend()
         iters = iters if iters is not None else cfg.iters
+        self._emit("run", iters=int(iters), record=bool(record))
         with_eval = record and self._test is not None
         if self._jit and backend == "vmap":
             Xte, yte = self._test if with_eval else (None, None)

@@ -97,6 +97,52 @@ class SolverConfig:
         """A copy with the given fields replaced (frozen dataclass)."""
         return dataclasses.replace(self, **kw)
 
+    def to_dict(self) -> dict:
+        """Plain-python form for the durable-session schema
+        (``repro.store``); ``from_dict`` inverts it exactly.
+
+        ``net`` serializes via ``NetConfig.to_dict``, ``budget`` as its
+        two ints.  ``backend_options`` must already be plain data —
+        device meshes / callables have no declarative form and raise a
+        ``TypeError`` naming the offending key.
+        """
+        for k, v in self.backend_options.items():
+            if not isinstance(v, (int, float, str, bool, type(None))):
+                raise TypeError(
+                    f"SolverConfig.to_dict: backend_options[{k!r}] is a "
+                    f"{type(v).__name__}, which has no serializable form "
+                    f"(meshes/callables are runtime objects — rebuild "
+                    f"them after from_dict instead)")
+        return {
+            "C": float(self.C), "eps1": float(self.eps1),
+            "eps2": float(self.eps2), "eta1": float(self.eta1),
+            "eta2": float(self.eta2), "iters": int(self.iters),
+            "qp_iters": int(self.qp_iters), "qp_solver": self.qp_solver,
+            "box_scale": None if self.box_scale is None
+            else float(self.box_scale),
+            "backend": self.backend,
+            "backend_options": dict(self.backend_options),
+            "net": None if self.net is None else self.net.to_dict(),
+            "budget": None if self.budget is None else
+            {"max_elems": None if self.budget.max_elems is None
+             else int(self.budget.max_elems),
+             "tile": None if self.budget.tile is None
+             else [int(t) for t in self.budget.tile]},
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SolverConfig":
+        """Rebuild a SolverConfig from ``to_dict``'s plain form."""
+        d = dict(d)
+        if d.get("net") is not None:
+            d["net"] = NetConfig.from_dict(d["net"])
+        if d.get("budget") is not None:
+            b = d["budget"]
+            d["budget"] = PlanBudget(
+                max_elems=b["max_elems"],
+                tile=None if b["tile"] is None else tuple(b["tile"]))
+        return cls(**d)
+
 
 @runtime_checkable
 class Solver(Protocol):

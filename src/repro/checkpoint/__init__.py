@@ -1,4 +1,7 @@
 from repro.checkpoint.msgpack_ckpt import (  # noqa: F401
+    CheckpointError,
+    available_steps,
+    gc_steps,
     latest_step,
     load,
     restore_latest,

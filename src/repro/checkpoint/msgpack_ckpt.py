@@ -1,14 +1,30 @@
 """Msgpack-based pytree checkpointing (orbax is not available offline).
 
-Arrays are serialized as (dtype, shape, raw bytes); the pytree structure is
-encoded as nested dicts/lists/tuples.  Writes are atomic (tmp + rename) and
-a ``step`` index file tracks the latest checkpoint for resume.
+Arrays are serialized as (dtype, shape, raw bytes) — a round-trip is
+bitwise (``tobytes`` → ``frombuffer``), which is what lets the durable
+session layer (``repro.store``) promise save → restore → continue
+equals the uninterrupted run exactly.  The pytree structure is encoded
+as nested dicts/lists/tuples; NamedTuples flatten to plain tuples
+(callers that need the class back reconstruct it themselves — see
+``repro.net.fabric.restore_state``).  Writes are atomic (tmp + rename)
+and a ``LATEST`` index file tracks the newest checkpoint for resume.
+
+Durability knobs on the step index:
+
+- ``save_step(..., keep_last=k)`` / ``gc_steps`` — retention: prune all
+  but the ``k`` newest ``ckpt_*.msgpack`` files after a save.
+- ``load`` raises ``CheckpointError`` (with the path and cause) on a
+  truncated/corrupt/empty file instead of a bare msgpack exception.
+- ``restore_latest(..., fallback=True)`` — when the newest checkpoint
+  is unreadable, fall back to the next-newest on disk (the previous
+  ``LATEST`` entry) rather than failing a resume on one bad write.
 """
 from __future__ import annotations
 
 import os
+import re
 import tempfile
-from typing import Any
+from typing import Any, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +33,11 @@ import numpy as np
 
 _ARR = "__arr__"
 _TUP = "__tup__"
+_STEP_RE = re.compile(r"^ckpt_(\d{8})\.msgpack$")
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint file could not be read (truncated, corrupt, empty)."""
 
 
 def _np_dtype(name: str) -> np.dtype:
@@ -28,7 +49,11 @@ def _np_dtype(name: str) -> np.dtype:
 
 
 def _encode(obj: Any):
-    if isinstance(obj, (jnp.ndarray, np.ndarray)):
+    # np.generic covers numpy scalars (np.float32(0.), np.bool_(True), …)
+    # which are NOT ndarray instances — they round-trip as 0-d arrays of
+    # the same dtype (the engine stores problem scalars as 0-d arrays,
+    # so 0-d in / 0-d out is the repo-wide convention anyway)
+    if isinstance(obj, (jnp.ndarray, np.ndarray, np.generic)):
         arr = np.asarray(obj)
         return {_ARR: True, "dtype": str(arr.dtype), "shape": list(arr.shape),
                 "data": arr.tobytes()}
@@ -48,8 +73,13 @@ def _encode(obj: Any):
 def _decode(obj: Any):
     if isinstance(obj, dict):
         if obj.get(_ARR):
+            # decode to NUMPY, not jnp: jnp.asarray would silently
+            # downcast 64-bit leaves under the default x32 config,
+            # breaking the bitwise round-trip promise; callers that
+            # want device arrays re-wrap (and pick their device) —
+            # see repro.store.session_store.restore_session
             arr = np.frombuffer(obj["data"], dtype=_np_dtype(obj["dtype"]))
-            return jnp.asarray(arr.reshape(obj["shape"]))
+            return arr.reshape(obj["shape"])
         if _TUP in obj:
             return tuple(_decode(v) for v in obj[_TUP])
         return {k: _decode(v) for k, v in obj.items()}
@@ -58,9 +88,21 @@ def _decode(obj: Any):
     return obj
 
 
+def encode_tree(tree: Any) -> bytes:
+    """One pytree as a standalone msgpack blob (the event-log record
+    format of ``repro.store.events``)."""
+    return msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True)
+
+
+def decode_tree(payload: Any):
+    """Inverse of the per-record encoding used by ``encode_tree``
+    (accepts the already-unpacked msgpack object)."""
+    return _decode(payload)
+
+
 def save(path: str, tree: Any) -> None:
     os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
-    payload = msgpack.packb(_encode(jax.device_get(tree)), use_bin_type=True)
+    payload = encode_tree(tree)
     fd, tmp = tempfile.mkstemp(dir=os.path.dirname(os.path.abspath(path)))
     with os.fdopen(fd, "wb") as f:
         f.write(payload)
@@ -68,15 +110,61 @@ def save(path: str, tree: Any) -> None:
 
 
 def load(path: str) -> Any:
-    with open(path, "rb") as f:
-        return _decode(msgpack.unpackb(f.read(), raw=False))
+    """Read one checkpoint file; ``CheckpointError`` on a bad read."""
+    try:
+        with open(path, "rb") as f:
+            raw = f.read()
+        if not raw:
+            raise ValueError("empty file")
+        return _decode(msgpack.unpackb(raw, raw=False))
+    except (OSError, ValueError, TypeError, KeyError,
+            msgpack.exceptions.UnpackException) as e:
+        raise CheckpointError(
+            f"checkpoint {path!r} is truncated or corrupt "
+            f"({type(e).__name__}: {e}); restore an earlier step "
+            f"(see restore_latest(..., fallback=True))") from e
 
 
-def save_step(ckpt_dir: str, step: int, tree: Any) -> str:
-    path = os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack")
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack")
+
+
+def available_steps(ckpt_dir: str) -> List[int]:
+    """Sorted step numbers with a ``ckpt_*.msgpack`` file on disk."""
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _STEP_RE.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def gc_steps(ckpt_dir: str, keep_last: int) -> List[int]:
+    """Delete all but the ``keep_last`` newest step files; returns the
+    pruned step numbers.  The ``LATEST`` index is never invalidated —
+    the newest step always survives."""
+    if keep_last < 1:
+        raise ValueError(f"keep_last must be >= 1, got {keep_last}")
+    steps = available_steps(ckpt_dir)
+    pruned = steps[:-keep_last] if len(steps) > keep_last else []
+    for step in pruned:
+        os.remove(_step_path(ckpt_dir, step))
+    return pruned
+
+
+def save_step(ckpt_dir: str, step: int, tree: Any,
+              keep_last: Optional[int] = None) -> str:
+    """Write ``tree`` as step ``step``, update ``LATEST``, and (when
+    ``keep_last`` is given) prune older step files down to the ``k``
+    newest.  Returns the written path."""
+    path = _step_path(ckpt_dir, step)
     save(path, tree)
     with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
         f.write(str(step))
+    if keep_last is not None:
+        gc_steps(ckpt_dir, keep_last)
     return path
 
 
@@ -88,8 +176,29 @@ def latest_step(ckpt_dir: str):
         return int(f.read().strip())
 
 
-def restore_latest(ckpt_dir: str):
-    step = latest_step(ckpt_dir)
-    if step is None:
+def restore_latest(ckpt_dir: str, fallback: bool = True):
+    """Load the newest checkpoint as ``(step, tree)`` (``(None, None)``
+    when the directory holds none).
+
+    A corrupt/truncated newest file normally fails a resume outright;
+    with ``fallback`` (the default) the next-newest on-disk step is
+    tried instead, walking back until one reads cleanly —
+    ``CheckpointError`` only when every candidate is bad.
+    """
+    steps = available_steps(ckpt_dir)
+    head = latest_step(ckpt_dir)
+    if head is not None and head in steps:          # newest first
+        steps = [s for s in steps if s != head] + [head]
+    if not steps:
         return None, None
-    return step, load(os.path.join(ckpt_dir, f"ckpt_{step:08d}.msgpack"))
+    errors = []
+    for step in reversed(steps):
+        try:
+            return step, load(_step_path(ckpt_dir, step))
+        except CheckpointError as e:
+            errors.append(str(e))
+            if not fallback:
+                raise
+    raise CheckpointError(
+        f"no readable checkpoint in {ckpt_dir!r}; tried steps "
+        f"{sorted(steps, reverse=True)}: " + " | ".join(errors))

@@ -24,10 +24,12 @@ recomputes each iteration.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dtsvm as core
 from repro.engine import invariants as inv_lib
@@ -148,6 +150,23 @@ class Plan:
 
         state, hist = jax.lax.scan(body, state, None, length=iters)
         return state, (hist if eval_fn is not None else None)
+
+    # -- identity --------------------------------------------------------
+    def fingerprint(self) -> str:
+        """A content hash of everything that determines the plan's
+        execution: every problem and invariant leaf (dtype, shape, raw
+        bytes) plus the QP configuration.  Two plans with equal
+        fingerprints step bitwise-identically, so the durable session
+        layer (``repro.store``) stores this hash instead of the (large,
+        deterministically rebuildable) invariants and asserts the
+        rebuilt plan matches on restore."""
+        h = hashlib.sha256()
+        for leaf in jax.tree_util.tree_leaves((self.prob, self.inv)):
+            arr = np.asarray(leaf)
+            h.update(f"{arr.dtype}|{arr.shape}|".encode())
+            h.update(arr.tobytes())
+        h.update(f"|{self.qp_iters}|{self.qp_solver}".encode())
+        return h.hexdigest()
 
     # -- incremental re-planning (the online Session path) -----------------
     def replan(self, *, active=None, couple=None) -> "Plan":

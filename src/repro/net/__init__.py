@@ -24,7 +24,8 @@ is BITWISE identical to ``backend="vmap"`` — the fabric generalizes the
 synchronous path, it does not fork it.  See API.md §net.
 """
 from repro.net.async_admm import AsyncResult, run_async
-from repro.net.fabric import Fabric, FabricState, build_fabric
+from repro.net.fabric import (Fabric, FabricState, build_fabric,
+                              restore_state, snapshot_state)
 from repro.net.policies import (LinkPolicy, NetConfig, apply_quant,
                                 bytes_per_message)
 from repro.net.schedule import Schedule, resolve as resolve_schedule
@@ -43,6 +44,8 @@ __all__ = [
     "meter",
     "policies",
     "resolve_schedule",
+    "restore_state",
     "run_async",
     "schedule",
+    "snapshot_state",
 ]

@@ -277,3 +277,38 @@ def build_fabric(prob, net: pol.NetConfig, *,
     """A Fabric over a DTSVMProblem's consensus graph and vector size."""
     p = prob.X.shape[-1]
     return Fabric(prob.adj, 2 * p + 2, net, force_mailbox=force_mailbox)
+
+
+# ---------------------------------------------------------------------------
+# durability (repro.store)
+# ---------------------------------------------------------------------------
+def snapshot_state(st: FabricState) -> dict:
+    """One FabricState as a name-keyed pytree of arrays — the schema
+    form the durable session layer serializes.  Field names (not tuple
+    positions) key the snapshot, so a reordered/extended FabricState in
+    a later schema version stays migratable."""
+    return dict(st._asdict())
+
+
+def restore_state(tree) -> FabricState:
+    """Rebuild a FabricState from ``snapshot_state``'s name-keyed form.
+
+    The array bytes round-trip untouched (``repro.checkpoint`` encodes
+    raw buffers), so mailboxes, delay rings, token-bucket credit and
+    the drop-stream round counter continue bitwise — the keystone of
+    the save → restore → continue guarantee for async sessions.
+    Missing or unknown fields raise (a schema mismatch should fail
+    loudly, not zero-fill a mailbox).
+    """
+    want = set(FabricState._fields)
+    got = set(tree)
+    if got != want:
+        raise ValueError(
+            f"fabric snapshot fields {sorted(got)} do not match "
+            f"FabricState{sorted(want)}; run a schema migration "
+            f"(repro.store.schema) before restoring")
+    kw = {k: jnp.asarray(v) for k, v in tree.items()}
+    # the ok-history ring is boolean; msgpack round-trips it as bool,
+    # but guard against a widened decode
+    kw["ok_hist"] = kw["ok_hist"].astype(bool)
+    return FabricState(**kw)

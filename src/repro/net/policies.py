@@ -85,6 +85,19 @@ class LinkPolicy:
         return (self.delay == 0 and self.drop == 0.0
                 and self.quant == "float32" and self.bandwidth is None)
 
+    def to_dict(self) -> dict:
+        """Plain-python form for the durable-session schema
+        (``repro.store``); ``from_dict`` inverts it exactly."""
+        return {"delay": int(self.delay), "drop": float(self.drop),
+                "quant": self.quant,
+                "bandwidth": None if self.bandwidth is None
+                else float(self.bandwidth)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "LinkPolicy":
+        """Rebuild a LinkPolicy from ``to_dict``'s plain form."""
+        return cls(**d)
+
 
 @dataclass(frozen=True)
 class NetConfig:
@@ -118,6 +131,37 @@ class NetConfig:
             return False
         return not self.edge_policies or all(
             p.is_identity for p in self.edge_policies.values())
+
+    def to_dict(self) -> dict:
+        """Plain-python form for the durable-session schema
+        (``repro.store``).  Edge overrides become a list of
+        ``[u, v, policy_dict]`` triples (msgpack has no tuple keys).
+        Only string schedule specs are serializable — a Schedule
+        *instance* has no declarative form, so it raises."""
+        if not isinstance(self.schedule, str):
+            raise TypeError(
+                "NetConfig.to_dict: only string schedule specs are "
+                "serializable; got a %r instance — pass the spec string "
+                '(e.g. "partial:0.5") instead of a resolved Schedule'
+                % type(self.schedule).__name__)
+        edges = None
+        if self.edge_policies:
+            edges = [[int(u), int(v), p.to_dict()]
+                     for (u, v), p in sorted(self.edge_policies.items())]
+        return {"policy": self.policy.to_dict(), "edge_policies": edges,
+                "schedule": self.schedule, "seed": int(self.seed),
+                "warm_fill": bool(self.warm_fill)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "NetConfig":
+        """Rebuild a NetConfig from ``to_dict``'s plain form."""
+        edges = d.get("edge_policies")
+        return cls(
+            policy=LinkPolicy.from_dict(d["policy"]),
+            edge_policies=None if edges is None else {
+                (u, v): LinkPolicy.from_dict(p) for u, v, p in edges},
+            schedule=d["schedule"], seed=d["seed"],
+            warm_fill=d["warm_fill"])
 
 
 # ---------------------------------------------------------------------------

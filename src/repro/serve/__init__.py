@@ -1,0 +1,30 @@
+"""repro.serve — low-latency batched inference for fitted networks.
+
+Training produces V*T tiny hyperplanes; serving them is a batching
+problem, not a compute problem.  ``PredictModel`` freezes the
+effective (w, b) per (node, task) out of a state / solver / session;
+``PredictServer`` coalesces concurrent predict requests into padded
+power-of-two GEMM batches (one ``X @ W.T`` per batch, round-robined
+across devices) and hot-swaps models between batches — the deployment
+story for an ``OnlineSession`` that keeps learning while it serves:
+
+    from repro.serve import PredictModel, PredictServer
+    srv = PredictServer(PredictModel.from_session(sess), window_ms=2.0)
+    fut = srv.submit(x, node=0, task=1)      # -> Future of decisions
+    sess.run(30); srv.publish_session(sess)  # next stage goes live
+    srv.stats()                              # p50/p99 latency, rps
+
+Batching never changes a value: GEMM rows are independent, so each
+request's answers are bitwise identical to an unbatched call
+(tests/test_serve.py).  ``benchmarks/bench_serve.py`` sweeps the
+batching window into ``BENCH_serve.json``.
+"""
+from repro.serve.model import PredictModel, gemm_rows
+from repro.serve.server import PredictServer, serve_model
+
+__all__ = [
+    "PredictModel",
+    "PredictServer",
+    "gemm_rows",
+    "serve_model",
+]

@@ -1,0 +1,45 @@
+"""repro.store — durable sessions: snapshots, event logs, replay.
+
+The online setting of the paper (Fig. 7) runs for a long time by
+construction — tasks enter and leave a live network.  This package
+makes those sessions survive the process: a ``SessionStore`` snapshots
+an ``OnlineSession`` onto the step-indexed msgpack substrate of
+``repro.checkpoint`` (retention + corrupt-head fallback included), and
+an ``EventLog`` records the session's decisions so ``replay`` can
+rebuild it from history alone.  Both directions are BITWISE: a
+restored (or replayed) session continues exactly the trajectory of the
+uninterrupted one, on every backend — including async sessions with
+live mailboxes, delay rings and round-keyed drop streams
+(tests/test_store.py).
+
+    from repro.store import SessionStore, EventLog, replay
+    store = SessionStore("ckpts/", keep_last=3)
+    log = EventLog()
+    sess = OnlineSession(X, y, mask=mask, adj=adj, config=cfg, log=log)
+    sess.run(30); store.save(sess); log.save("run.events")
+    ...
+    sess = store.load()                       # state-based resume
+    twin = replay(EventLog.load("run.events"))  # history-based rebuild
+
+See API.md §store for the schema version table and migration story.
+"""
+from repro.store.events import EventLog, replay
+from repro.store.schema import (SCHEMA_VERSION, SchemaError, migrate,
+                                register_migration)
+from repro.store.session_store import (SessionStore, load_session,
+                                       restore_session, save_session,
+                                       snapshot_session)
+
+__all__ = [
+    "EventLog",
+    "SCHEMA_VERSION",
+    "SchemaError",
+    "SessionStore",
+    "load_session",
+    "migrate",
+    "register_migration",
+    "replay",
+    "restore_session",
+    "save_session",
+    "snapshot_session",
+]

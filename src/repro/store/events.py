@@ -1,0 +1,121 @@
+"""Append-only event logs: an ``OnlineSession`` as its decisions.
+
+A snapshot (``session_store``) is the session's STATE; an event log is
+its HISTORY — the constructor arguments plus every membership event and
+``run`` call, in order.  Because the whole stack is deterministic given
+that history (drops and schedules key on seeds carried in the config;
+the engine is bitwise-reproducible), ``replay`` rebuilds the exact
+session — state, counters, mailboxes and all — from the log alone:
+
+    log = EventLog()
+    sess = OnlineSession(X, y, mask=mask, adj=adj, config=cfg, log=log)
+    sess.run(30); sess.drop_task(1); sess.set_coupling(True); sess.run(30)
+    log.save("run.events")
+    ...
+    twin = replay(EventLog.load("run.events"))   # bitwise == sess
+
+Records are plain dicts on the msgpack substrate of
+``repro.checkpoint`` (arrays as raw bytes), stamped with the store
+schema version.  The log is append-only: sessions only ever ``append``;
+``replay`` never mutates it.  ``benchmarks/fig7_online.py`` routes its
+figure through a replay to prove reconstruction on the paper's own
+experiment.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro import checkpoint
+from repro.store import schema
+
+# the event vocabulary; "init" is always record 0
+EVENTS = ("init", "add_task", "drop_task", "set_active", "set_coupling",
+          "run")
+
+
+class EventLog:
+    """An append-only list of session events (see module docstring).
+
+    Sessions built with ``OnlineSession(..., log=log)`` append to it on
+    construction and on every membership event / ``run`` call; any
+    object with an ``append(event, **payload)`` method works, so tests
+    can interpose."""
+
+    def __init__(self, records: Optional[List[Dict[str, Any]]] = None):
+        self.records: List[Dict[str, Any]] = (list(records)
+                                              if records else [])
+
+    def append(self, event: str, **payload) -> None:
+        """Append one event record (the session calls this; event must
+        be in ``EVENTS``)."""
+        if event not in EVENTS:
+            raise ValueError(f"unknown event {event!r}; expected one of "
+                             f"{EVENTS}")
+        self.records.append({"event": event, **payload})
+
+    def __len__(self) -> int:
+        return len(self.records)
+
+    def save(self, path: str) -> None:
+        """Serialize the log (atomic write, versioned schema)."""
+        checkpoint.save(path, schema.stamp("event_log",
+                                           {"records": self.records}))
+
+    @classmethod
+    def load(cls, path: str) -> "EventLog":
+        """Read a log written by ``save`` (schema-migrated)."""
+        tree = schema.migrate(checkpoint.load(path))
+        if tree.get("kind") != "event_log":
+            raise schema.SchemaError(
+                f"expected an 'event_log' artifact, got kind="
+                f"{tree.get('kind')!r}")
+        return cls(records=tree["records"])
+
+
+def _nodes(rec: Dict[str, Any]):
+    n = rec.get("nodes")
+    return None if n is None else [int(v) for v in n]
+
+
+def replay(log: EventLog, upto: Optional[int] = None):
+    """Re-execute a log into a fresh ``OnlineSession``.
+
+    ``upto`` stops after that many records (prefix replay — time-travel
+    to any point of the session's life).  The result is bitwise
+    identical to the session that wrote the log (tests/test_store.py):
+    every source of randomness is a seed inside the logged config, and
+    every compute path in the stack is deterministic and split-
+    invariant, so replaying the decisions replays the trajectory.
+    """
+    from repro.api.session import OnlineSession        # session is log-
+    from repro.api.solvers import SolverConfig         # agnostic; we are
+    records = log.records[:upto]
+    if not records or records[0].get("event") != "init":
+        raise ValueError("log does not start with an 'init' record — "
+                         "was the session built with log=?")
+    init = records[0]
+    sess = OnlineSession(
+        init["X"], init["y"], mask=init["mask"], adj=init["adj"],
+        config=SolverConfig.from_dict(init["config"]),
+        active=np.asarray(init["active"]),
+        couple=np.asarray(init["couple"]), jit=bool(init["jit"]),
+        X_test=init["X_test"], y_test=init["y_test"])
+    for rec in records[1:]:
+        ev = rec["event"]
+        if ev == "add_task":
+            sess.add_task(int(rec["task"]), _nodes(rec))
+        elif ev == "drop_task":
+            sess.drop_task(int(rec["task"]), _nodes(rec))
+        elif ev == "set_active":
+            sess.set_active(np.asarray(rec["active"]))
+        elif ev == "set_coupling":
+            on = rec["on"]
+            sess.set_coupling(on if np.ndim(on) == 0 else np.asarray(on),
+                              _nodes(rec))
+        elif ev == "run":
+            sess.run(int(rec["iters"]), record=bool(rec["record"]))
+        else:
+            raise ValueError(f"cannot replay event {ev!r}")
+    return sess

@@ -1,0 +1,104 @@
+"""The durable-session schema: version stamp + migration registry.
+
+Every artifact ``repro.store`` writes — session snapshots
+(``session_store``) and event logs (``events``) — carries a
+``schema_version`` int and a ``kind`` tag at its top level.  Readers
+call ``migrate`` before touching any other field: snapshots written by
+an older code version are upgraded in memory, step by registered step,
+until they reach the current ``SCHEMA_VERSION``; snapshots from a NEWER
+writer fail loudly (downgrades are not a thing we guess at).
+
+Version table
+-------------
+
+=======  ==================================================================
+version  contents
+=======  ==================================================================
+1        initial schema: ``online_session`` snapshots (config dict, data
+         arrays, membership masks, ADMM state, plan fingerprint, fabric
+         state + byte series, history blocks) and ``event_log`` records
+         (``init`` / ``add_task`` / ``drop_task`` / ``set_active`` /
+         ``set_coupling`` / ``run``).
+=======  ==================================================================
+
+Writing a migration
+-------------------
+
+When the schema changes, bump ``SCHEMA_VERSION`` and register an
+upgrader from the previous version::
+
+    @register_migration(1)
+    def _v1_to_v2(tree):
+        tree["net"] = tree.pop("fabric", None)     # whatever changed
+        tree["schema_version"] = 2
+        return tree
+
+``migrate`` chains upgraders, so a v1 file still loads after three more
+bumps as long as each step is registered.  The same mechanism guards
+the on-disk step index of ``repro.checkpoint``: ``SessionStore.load``
+runs ``migrate`` on whatever ``restore_latest`` hands back.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict
+
+SCHEMA_VERSION = 1
+
+# from-version -> upgrader(tree) -> tree (with schema_version bumped)
+_MIGRATIONS: Dict[int, Callable[[dict], dict]] = {}
+
+
+class SchemaError(RuntimeError):
+    """A snapshot's schema version cannot be brought to the current one."""
+
+
+def register_migration(from_version: int):
+    """Decorator: register ``fn`` as the upgrader FROM ``from_version``.
+
+    ``fn`` receives the decoded snapshot dict, mutates/returns it, and
+    MUST set a strictly larger ``schema_version`` — ``migrate`` chains
+    registered steps until the current version is reached.
+    """
+    def deco(fn: Callable[[dict], dict]):
+        _MIGRATIONS[int(from_version)] = fn
+        return fn
+    return deco
+
+
+def migrate(tree: Any) -> dict:
+    """Bring a decoded snapshot to ``SCHEMA_VERSION`` (in memory).
+
+    Raises ``SchemaError`` when the stamp is missing, newer than this
+    code, or older with no registered migration path.
+    """
+    if not isinstance(tree, dict) or "schema_version" not in tree:
+        raise SchemaError(
+            "not a repro.store artifact: missing 'schema_version' "
+            f"(got {type(tree).__name__})")
+    v = int(tree["schema_version"])
+    if v > SCHEMA_VERSION:
+        raise SchemaError(
+            f"snapshot schema v{v} is newer than this code "
+            f"(v{SCHEMA_VERSION}); upgrade repro to read it")
+    while v < SCHEMA_VERSION:
+        fn = _MIGRATIONS.get(v)
+        if fn is None:
+            raise SchemaError(
+                f"no migration registered from schema v{v} "
+                f"(current v{SCHEMA_VERSION}); cannot upgrade")
+        tree = fn(tree)
+        nv = int(tree["schema_version"])
+        if nv <= v:
+            raise SchemaError(
+                f"migration from v{v} did not advance the version "
+                f"(still v{nv})")
+        v = nv
+    return tree
+
+
+def stamp(kind: str, tree: dict) -> dict:
+    """Attach the current version + kind tag to a fresh artifact."""
+    out = dict(tree)
+    out["schema_version"] = SCHEMA_VERSION
+    out["kind"] = kind
+    return out

@@ -1,0 +1,217 @@
+"""The msgpack checkpoint substrate: bitwise round-trips, the step
+index, retention GC, and corrupt-file fallback — the guarantees
+``repro.store`` builds its durability story on."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint
+from repro.checkpoint import (CheckpointError, available_steps, gc_steps,
+                              latest_step, restore_latest, save_step)
+
+
+def _leaves_equal(a, b):
+    la = jax.tree_util.tree_leaves(a)
+    lb = jax.tree_util.tree_leaves(b)
+    assert len(la) == len(lb)
+    for x, z in zip(la, lb):
+        x, z = np.asarray(x), np.asarray(z)
+        assert x.dtype == z.dtype and x.shape == z.shape
+        assert np.array_equal(x, z, equal_nan=x.dtype.kind == "f")
+
+
+def _roundtrip(tmp_path, tree):
+    path = os.path.join(tmp_path, "t.msgpack")
+    checkpoint.save(path, tree)
+    return checkpoint.load(path)
+
+
+# ---------------------------------------------------------------------------
+# deterministic round-trips (run everywhere; the hypothesis property
+# below widens the search when the optional dep is installed)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("leaf", [
+    np.float32(1.5),                                # 0-d numpy scalar
+    np.bool_(True),
+    np.asarray(0.1, np.float32),                    # 0-d array
+    np.zeros((0,), np.float32),                     # empty
+    np.zeros((3, 0, 2), np.float64),                # empty, non-trivial shape
+    np.asarray([True, False, True]),
+    np.arange(6, dtype=np.int32).reshape(2, 3),
+    np.asarray([np.nan, np.inf, -np.inf, -0.0], np.float32),
+    jnp.asarray([1.0, 2.0], jnp.bfloat16),
+    jnp.asarray(2.5, jnp.bfloat16),                 # 0-d bf16
+], ids=["f32-scalar", "bool-scalar", "0d-f32", "empty", "empty-3d",
+        "bools", "int32", "specials", "bf16", "0d-bf16"])
+def test_leaf_roundtrip_bitwise(tmp_path, leaf):
+    got = _roundtrip(tmp_path, {"x": leaf})["x"]
+    want = np.asarray(leaf)
+    got = np.asarray(got)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    # compare raw bytes: NaN payloads and -0.0 must survive too
+    assert got.tobytes() == want.tobytes()
+
+
+def test_nested_structure_roundtrip(tmp_path):
+    tree = {
+        "a": [np.float32(3.0), {"b": (np.arange(4),
+                                      np.zeros((0, 2), np.float32))}],
+        "c": {"d": None, "e": True, "f": 7, "g": "hi", "h": 2.5},
+        "t": (1, (2, [np.bool_(False)])),
+    }
+    got = _roundtrip(tmp_path, tree)
+    # structure: tuples stay tuples, lists stay lists, None/str/bool/int
+    # pass through
+    assert isinstance(got["a"], list) and isinstance(got["t"], tuple)
+    assert got["c"]["d"] is None and got["c"]["g"] == "hi"
+    _leaves_equal(tree, got)
+
+
+def test_namedtuple_flattens_to_tuple(tmp_path):
+    from repro.net.fabric import FabricState
+    st = FabricState(*[np.float32(i) for i in range(9)])
+    got = _roundtrip(tmp_path, {"st": st})["st"]
+    assert isinstance(got, tuple) and len(got) == 9
+    _leaves_equal(tuple(st), got)
+
+
+def test_unserializable_raises():
+    with pytest.raises(TypeError, match="cannot serialize"):
+        checkpoint.msgpack_ckpt._encode(object())
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property: arbitrary nested pytrees round-trip bitwise
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # optional test dep; see tests/test_property.py
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _DTYPES = [np.dtype(np.float32), np.dtype(np.float64),
+               np.dtype(np.int32), np.dtype(np.int8), np.dtype(bool)]
+
+    @st.composite
+    def _arrays(draw):
+        dt = draw(st.sampled_from(_DTYPES))
+        shape = tuple(draw(st.lists(st.integers(0, 4), min_size=0,
+                                    max_size=3)))
+        rng = np.random.default_rng(draw(st.integers(0, 2**31 - 1)))
+        if dt == np.dtype(bool):
+            return rng.integers(0, 2, size=shape).astype(bool)
+        if dt.kind == "f":
+            return rng.normal(size=shape).astype(dt)
+        return rng.integers(-100, 100, size=shape).astype(dt)
+
+    def _trees(leaves):
+        return st.recursive(
+            leaves,
+            lambda kids: st.one_of(
+                st.lists(kids, max_size=3),
+                st.tuples(kids, kids),
+                st.dictionaries(st.text(
+                    alphabet="abcdefgh", min_size=1, max_size=4),
+                    kids, max_size=3)),
+            max_leaves=8)
+
+    @settings(max_examples=30, deadline=None)
+    @given(tree=_trees(st.one_of(
+        _arrays(), st.none(), st.booleans(), st.integers(-10, 10),
+        st.floats(allow_nan=False), st.text(max_size=6))))
+    def test_pytree_roundtrip_property(tmp_path_factory, tree):
+        tmp = tmp_path_factory.mktemp("ckpt")
+        got = _roundtrip(str(tmp), tree)
+        _leaves_equal(tree, got)
+        assert (jax.tree_util.tree_structure(got)
+                == jax.tree_util.tree_structure(tree))
+
+
+# ---------------------------------------------------------------------------
+# step index: retention GC
+# ---------------------------------------------------------------------------
+def test_save_step_and_gc_keep_last(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2, 5, 9):
+        save_step(d, step, {"s": np.int32(step)})
+    assert available_steps(d) == [1, 2, 5, 9]
+    assert latest_step(d) == 9
+
+    pruned = gc_steps(d, keep_last=2)
+    assert pruned == [1, 2]
+    assert available_steps(d) == [5, 9]
+    step, tree = restore_latest(d)
+    assert step == 9 and int(tree["s"]) == 9
+
+
+def test_save_step_with_keep_last_prunes_inline(tmp_path):
+    d = str(tmp_path)
+    for step in range(6):
+        save_step(d, step, {"s": np.int32(step)}, keep_last=3)
+    assert available_steps(d) == [3, 4, 5]
+    assert latest_step(d) == 5
+
+
+def test_gc_keep_last_validates(tmp_path):
+    with pytest.raises(ValueError, match="keep_last"):
+        gc_steps(str(tmp_path), keep_last=0)
+
+
+def test_gc_noop_when_fewer_steps(tmp_path):
+    d = str(tmp_path)
+    save_step(d, 1, {"s": np.int32(1)})
+    assert gc_steps(d, keep_last=5) == []
+    assert available_steps(d) == [1]
+
+
+# ---------------------------------------------------------------------------
+# corruption: clear errors, fallback to the previous step
+# ---------------------------------------------------------------------------
+def _corrupt(path, payload=b"\x93\x01"):
+    with open(path, "wb") as f:
+        f.write(payload)
+
+
+def test_load_truncated_raises_checkpoint_error(tmp_path):
+    path = os.path.join(str(tmp_path), "c.msgpack")
+    checkpoint.save(path, {"x": np.arange(100)})
+    with open(path, "rb") as f:
+        raw = f.read()
+    _corrupt(path, raw[: len(raw) // 2])
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        checkpoint.load(path)
+
+
+def test_load_empty_file_raises(tmp_path):
+    path = os.path.join(str(tmp_path), "e.msgpack")
+    _corrupt(path, b"")
+    with pytest.raises(CheckpointError, match="truncated or corrupt"):
+        checkpoint.load(path)
+
+
+def test_restore_latest_falls_back_past_corrupt_head(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2, 3):
+        save_step(d, step, {"s": np.int32(step)})
+    _corrupt(os.path.join(d, "ckpt_00000003.msgpack"))
+    step, tree = restore_latest(d)            # fallback=True default
+    assert step == 2 and int(tree["s"]) == 2
+    with pytest.raises(CheckpointError):
+        restore_latest(d, fallback=False)
+
+
+def test_restore_latest_all_corrupt_raises_aggregate(tmp_path):
+    d = str(tmp_path)
+    for step in (1, 2):
+        save_step(d, step, {"s": np.int32(step)})
+        _corrupt(os.path.join(d, f"ckpt_{step:08d}.msgpack"))
+    with pytest.raises(CheckpointError, match="no readable checkpoint"):
+        restore_latest(d)
+
+
+def test_restore_latest_empty_dir(tmp_path):
+    assert restore_latest(str(tmp_path)) == (None, None)

@@ -1,6 +1,7 @@
 """Docstring coverage on the public API (the docs lane's second gate).
 
-Every public symbol of the ``repro.api`` modules — plus the engine's
+Every public symbol of the ``repro.api``, ``repro.store`` and
+``repro.serve`` modules — plus the engine's
 compile entry points and the net policy types — must carry a docstring,
 and so must every public method they define.  "Public" means not
 underscore-prefixed and actually defined in the module under test
@@ -14,6 +15,11 @@ import repro.api.evaluate
 import repro.api.session
 import repro.api.solvers
 import repro.api.sweep
+import repro.serve.model
+import repro.serve.server
+import repro.store.events
+import repro.store.schema
+import repro.store.session_store
 from repro.engine.invariants import PlanBudget
 from repro.engine.plan import compile_problem
 from repro.engine.sweep import compile_sweep
@@ -26,6 +32,11 @@ MODULES = [
     repro.api.session,
     repro.api.solvers,
     repro.api.sweep,
+    repro.serve.model,
+    repro.serve.server,
+    repro.store.events,
+    repro.store.schema,
+    repro.store.session_store,
 ]
 
 # symbols documented individually even though they live outside repro.api

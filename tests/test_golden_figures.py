@@ -32,11 +32,15 @@ FIG2_REGIME = dict(V=6, deg=0.8, n_tgt=40, n_src=200, seeds=(0,),
                    iters=12, n_test=300)
 FIG3_REGIME = dict(eps_grid=(0.1, 10.0), seeds=(0,), iters=10, V=6,
                    n_per_task=(24, 120), degree=0.8, qp_iters=60)
+FIG4_REGIME = dict(c_grid=(0.01, 0.1), e2_grid=(1.0, 100.0), seeds=(0,),
+                   iters=8, V=6, n_per_task=(24, 120), degree=0.8,
+                   qp_iters=60)
 FIG5_REGIME = dict(pos_fracs=(2 / 12, 4 / 12), seeds=(0,), iters=10,
                    V=4, n_per_task=(12, 120), n_test=300,
                    csvm_qp_iters=300)
 FIG6_REGIME = dict(seeds=(0,), iters=10, V=6, n_tgt=4, n_src=80,
                    n_test=300)
+FIG7_REGIME = dict(stage_iters=4, seed=0, n_test=300, qp_iters=40)
 
 
 def _fig2_outputs():
@@ -60,6 +64,16 @@ def _fig3_outputs():
             "csvm": np.asarray(csvm_m).tolist()}
 
 
+def _fig4_outputs():
+    import fig4_c_sweep
+    r = dict(FIG4_REGIME)
+    risks, _ = fig4_c_sweep.sweep_grid(
+        r.pop("c_grid"), r.pop("e2_grid"), r.pop("seeds"),
+        r.pop("iters"), **r)
+    return {"grid": [[c, e2, *np.asarray(m).tolist()]
+                     for (c, e2), m in risks.items()]}
+
+
 def _fig5_outputs():
     import fig5_unbalanced
     r = dict(FIG5_REGIME)
@@ -77,10 +91,21 @@ def _fig6_outputs():
             "right_mixed": np.asarray(right).tolist()}
 
 
+def _fig7_outputs():
+    # also exercises the event-log replay audit inside stage_marks:
+    # the fixture values are certified reproducible from the log alone
+    import fig7_online
+    r = dict(FIG7_REGIME)
+    marks, _ = fig7_online.stage_marks(r.pop("stage_iters"), **r)
+    return {name: np.asarray(v).tolist() for name, v in marks.items()}
+
+
 _FIGS = {"fig2": (_fig2_outputs, FIG2_REGIME),
          "fig3": (_fig3_outputs, FIG3_REGIME),
+         "fig4": (_fig4_outputs, FIG4_REGIME),
          "fig5": (_fig5_outputs, FIG5_REGIME),
-         "fig6": (_fig6_outputs, FIG6_REGIME)}
+         "fig6": (_fig6_outputs, FIG6_REGIME),
+         "fig7": (_fig7_outputs, FIG7_REGIME)}
 
 
 def _load(name):

@@ -1,0 +1,277 @@
+"""repro.serve: the frozen predict model and the batching server.
+
+The contract under test: batching/padding is invisible in the VALUES —
+every request's answers are bitwise identical to the canonical
+unbatched computation (``PredictModel.decide_rows``) no matter what it
+shared a GEMM with — plus hot-swap, stats, and the model extraction
+paths."""
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+from repro.api.session import OnlineSession
+from repro.api.solvers import DTSVM, SolverConfig
+from repro.core import dtsvm as core
+from repro.serve import PredictModel, PredictServer
+from repro.serve.model import row_bucket
+
+V, T, P = 3, 2, 4
+
+
+def _model(seed=0) -> PredictModel:
+    rng = np.random.default_rng(seed)
+    return PredictModel.from_r(
+        rng.normal(size=(V, T, 2 * P + 2)).astype(np.float32))
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    N = 10
+    X = rng.normal(size=(V, T, N, P)).astype(np.float32)
+    y = np.sign(rng.normal(size=(V, T, N))).astype(np.float32)
+    adj = ~np.eye(V, dtype=bool)
+    return X, y, adj
+
+
+# ---------------------------------------------------------------------------
+# the model view
+# ---------------------------------------------------------------------------
+def test_model_matches_core_decision_values():
+    rng = np.random.default_rng(1)
+    r = rng.normal(size=(V, T, 2 * P + 2)).astype(np.float32)
+    X = rng.normal(size=(T, 9, P)).astype(np.float32)
+    Xb = np.broadcast_to(X[None], (V, T, 9, P))
+    want = np.asarray(core.decision_values(jnp.asarray(r),
+                                           jnp.asarray(Xb)))
+    m = PredictModel.from_r(r)
+    np.testing.assert_allclose(np.asarray(m.decision(X)), want,
+                               rtol=0, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(m.predict(X)),
+                                  np.sign(want))
+    assert m.shape == (V, T, P)
+
+
+def test_model_from_solver_and_session():
+    X, y, adj = _data()
+    cfg = SolverConfig(iters=3, qp_iters=10)
+    solver = DTSVM(cfg).fit(X, y, adj=adj)
+    m1 = PredictModel.from_solver(solver)
+    sess = OnlineSession(X, y, adj=adj, config=cfg)
+    sess.run(3)
+    m2 = PredictModel.from_session(sess)
+    np.testing.assert_array_equal(np.asarray(m1.W), np.asarray(m2.W))
+    np.testing.assert_array_equal(np.asarray(m1.b), np.asarray(m2.b))
+    Xte = np.random.default_rng(2).normal(size=(T, 6, P)).astype(np.float32)
+    np.testing.assert_allclose(np.asarray(m1.decision(Xte)),
+                               np.asarray(solver.decision(Xte)),
+                               rtol=0, atol=1e-6)
+
+
+def test_model_requires_fit():
+    with pytest.raises(RuntimeError, match="fit"):
+        PredictModel.from_solver(DTSVM(SolverConfig()))
+    X, y, adj = _data()
+    with pytest.raises(RuntimeError, match="run"):
+        PredictModel.from_session(OnlineSession(X, y, adj=adj))
+
+
+def test_rows_bitwise_stable_across_buckets():
+    """The keystone: a GEMM row's value does not depend on the bucket
+    shape it was computed in — what lets the server pad freely."""
+    m = _model()
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=(5, P)).astype(np.float32)
+    from repro.serve.model import gemm_rows
+    Wf, bf = m.flat()
+    ref = None
+    for bucket in (8, 32, 256):
+        Xp = np.zeros((bucket, P), np.float32)
+        Xp[:5] = x
+        G = np.asarray(gemm_rows(Wf, bf, jnp.asarray(Xp)))[:5]
+        if ref is None:
+            ref = G
+        np.testing.assert_array_equal(G, ref)
+
+
+def test_row_bucket_shapes():
+    assert [row_bucket(n) for n in (1, 8, 9, 100)] == [8, 8, 16, 128]
+
+
+# ---------------------------------------------------------------------------
+# the server
+# ---------------------------------------------------------------------------
+def test_batched_equals_direct_exact():
+    m = _model()
+    rng = np.random.default_rng(4)
+    with PredictServer(m, window_ms=2.0) as srv:
+        reqs = []
+        for _ in range(60):
+            n = int(rng.integers(1, 9))
+            x = rng.normal(size=(n, P)).astype(np.float32)
+            v, t = int(rng.integers(V)), int(rng.integers(T))
+            reqs.append((x, v, t, srv.submit(x, node=v, task=t)))
+        for x, v, t, fut in reqs:
+            got = fut.result(30)
+            np.testing.assert_array_equal(
+                got, m.decide_rows(x)[:, v * T + t])
+        stats = srv.stats()
+    assert stats["requests"] == 60
+    assert stats["batches"] <= 60            # coalescing happened at all
+    assert stats["p50_ms"] <= stats["p99_ms"]
+    assert stats["rps"] > 0 and stats["devices"] >= 1
+
+
+def test_answers_independent_of_co_batching():
+    """The same request answered alone and answered inside a packed
+    batch yields bitwise-identical values."""
+    m = _model()
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(3, P)).astype(np.float32)
+    with PredictServer(m, window_ms=0.0) as srv:      # greedy: x alone
+        alone = srv.predict(x, node=1, task=0)
+    with PredictServer(m, window_ms=20.0) as srv:     # packed batch
+        futs = [srv.submit(rng.normal(size=(int(rng.integers(1, 7)),
+                                            P)).astype(np.float32),
+                           node=int(rng.integers(V)),
+                           task=int(rng.integers(T)))
+                for _ in range(10)]
+        mine = srv.submit(x, node=1, task=0)
+        packed = mine.result(30)
+        for f in futs:
+            f.result(30)
+    np.testing.assert_array_equal(alone, packed)
+
+
+def test_scalar_request():
+    m = _model()
+    rng = np.random.default_rng(6)
+    x = rng.normal(size=(P,)).astype(np.float32)
+    with PredictServer(m, window_ms=0.0) as srv:
+        got = srv.predict(x, node=2, task=1)
+    assert np.ndim(got) == 0
+    assert got == m.decide_rows(x[None])[0, 2 * T + 1]
+
+
+def test_hot_swap_publish():
+    m1, m2 = _model(0), _model(7)
+    rng = np.random.default_rng(8)
+    x = rng.normal(size=(4, P)).astype(np.float32)
+    with PredictServer(m1, window_ms=0.0) as srv:
+        np.testing.assert_array_equal(srv.predict(x, node=0, task=0),
+                                      m1.decide_rows(x)[:, 0])
+        srv.publish(m2)
+        np.testing.assert_array_equal(srv.predict(x, node=0, task=0),
+                                      m2.decide_rows(x)[:, 0])
+
+
+def test_publish_session_stage_swap():
+    """The deployment loop: serve stage 1, run stage 2 live, publish —
+    requests flip to the new hyperplanes."""
+    X, y, adj = _data()
+    sess = OnlineSession(X, y, adj=adj,
+                         config=SolverConfig(iters=2, qp_iters=10))
+    sess.run(2)
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(4, P)).astype(np.float32)
+    with PredictServer(PredictModel.from_session(sess),
+                       window_ms=0.0) as srv:
+        before = srv.predict(x, node=0, task=1)
+        sess.drop_task(0)
+        sess.run(2)
+        srv.publish_session(sess)
+        after = srv.predict(x, node=0, task=1)
+        want = PredictModel.from_session(sess).decide_rows(x)[:, 1]
+    np.testing.assert_array_equal(after, want)
+    assert not np.array_equal(before, after)
+
+
+def test_concurrent_clients_all_exact():
+    m = _model()
+    errs = []
+
+    def client(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            for _ in range(15):
+                n = int(rng.integers(1, 6))
+                x = rng.normal(size=(n, P)).astype(np.float32)
+                v, t = int(rng.integers(V)), int(rng.integers(T))
+                got = srv.predict(x, node=v, task=t)
+                np.testing.assert_array_equal(
+                    got, m.decide_rows(x)[:, v * T + t])
+        except Exception as e:          # surfaces in the main thread
+            errs.append(e)
+
+    with PredictServer(m, window_ms=1.0) as srv:
+        threads = [threading.Thread(target=client, args=(s,))
+                   for s in range(6)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    assert not errs, errs
+
+
+def test_request_validation():
+    m = _model()
+    with PredictServer(m, window_ms=0.0, max_batch=64) as srv:
+        with pytest.raises(ValueError, match="x must be"):
+            srv.submit(np.zeros((2, P + 1), np.float32), node=0, task=0)
+        with pytest.raises(ValueError, match="out of range"):
+            srv.submit(np.zeros((2, P), np.float32), node=V, task=0)
+        with pytest.raises(ValueError, match="exceeds"):
+            srv.submit(np.zeros((65, P), np.float32), node=0, task=0)
+    with pytest.raises(RuntimeError, match="closed"):
+        srv.submit(np.zeros((1, P), np.float32), node=0, task=0)
+
+
+def test_stats_counters():
+    m = _model()
+    with PredictServer(m, window_ms=0.0) as srv:
+        s0 = srv.stats()
+        assert s0["requests"] == 0 and s0["p50_ms"] is None
+        for _ in range(5):
+            srv.predict(np.zeros((2, P), np.float32), node=0, task=0)
+        s = srv.stats()
+    assert s["requests"] == 5 and s["rows"] == 10
+    assert s["pad_ratio"] is not None and 0 <= s["pad_ratio"] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# multi-device serving (subprocess)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_multi_device_round_robin_exact():
+    run_with_devices("""
+    import numpy as np, jax
+    from repro.serve import PredictModel, PredictServer
+
+    V, T, P = 3, 2, 4
+    rng = np.random.default_rng(0)
+    m = PredictModel.from_r(
+        rng.normal(size=(V, T, 2 * P + 2)).astype(np.float32))
+    devs = jax.devices()
+    assert len(devs) == 2
+    with PredictServer(m, window_ms=1.0, devices=devs) as srv:
+        # two separated waves -> at least two batches, so the round-
+        # robin provably lands on BOTH devices; values must be exact
+        # regardless of which device answered
+        for wave in range(2):
+            reqs = []
+            for _ in range(20):
+                n = int(rng.integers(1, 9))
+                x = rng.normal(size=(n, P)).astype(np.float32)
+                v, t = int(rng.integers(V)), int(rng.integers(T))
+                reqs.append((x, v, t, srv.submit(x, node=v, task=t)))
+            for x, v, t, fut in reqs:
+                np.testing.assert_array_equal(
+                    fut.result(30), m.decide_rows(x)[:, v * T + t])
+        s = srv.stats()
+    assert s["devices"] == 2 and s["batches"] >= 2
+    print("MATCH")
+    """, n_devices=2)

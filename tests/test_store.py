@@ -1,0 +1,402 @@
+"""repro.store: durable sessions, event-log replay, schema migration.
+
+The headline invariant — save → restore → continue is BITWISE identical
+to the uninterrupted run — is asserted here for every backend (vmap /
+async with live mailboxes in-process; shard_map / sample_shard in
+forced-multi-device subprocesses) and for both dense and budgeted
+plans, plus replay-from-log equivalence and the restore-under-a-
+different-default-device case."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from helpers import run_with_devices
+from repro import checkpoint
+from repro.api.session import OnlineSession
+from repro.api.solvers import SolverConfig
+from repro.engine.invariants import PlanBudget
+from repro.net import LinkPolicy, NetConfig
+from repro.store import (EventLog, SchemaError, SessionStore, load_session,
+                         replay, restore_session, save_session,
+                         snapshot_session)
+from repro.store import schema as schema_lib
+
+V, T, N, P = 4, 2, 12, 3
+
+
+def _data(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(V, T, N, P)).astype(np.float32)
+    y = np.sign(rng.normal(size=(V, T, N))).astype(np.float32)
+    adj = np.zeros((V, V), bool)
+    for v in range(V):
+        adj[v, (v + 1) % V] = adj[(v + 1) % V, v] = True
+    Xte = rng.normal(size=(T, 16, P)).astype(np.float32)
+    yte = np.sign(rng.normal(size=(T, 16))).astype(np.float32)
+    return X, y, adj, Xte, yte
+
+
+def _session(cfg, log=None, with_test=True):
+    X, y, adj, Xte, yte = _data()
+    kw = dict(X_test=Xte, y_test=yte) if with_test else {}
+    return OnlineSession(X, y, adj=adj, config=cfg, log=log, **kw)
+
+
+def _assert_sessions_equal(a, b):
+    """Bitwise: ADMM state, counters, histories, and (when present)
+    the whole fabric state — mailboxes, rings, credit, round."""
+    la = jax.tree_util.tree_leaves(a.state)
+    lb = jax.tree_util.tree_leaves(b.state)
+    assert len(la) == len(lb)
+    for x, z in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+    assert a.iteration == b.iteration
+    assert len(a.history) == len(b.history)
+    for ha, hb in zip(a.history, b.history):
+        np.testing.assert_array_equal(ha, hb)
+    np.testing.assert_array_equal(a.active, b.active)
+    np.testing.assert_array_equal(a.couple, b.couple)
+    assert (a._net_state is None) == (b._net_state is None)
+    if a._net_state is not None:
+        for x, z in zip(jax.tree_util.tree_leaves(a._net_state),
+                        jax.tree_util.tree_leaves(b._net_state)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+        np.testing.assert_array_equal(np.asarray(a._net_series),
+                                      np.asarray(b._net_series))
+
+
+_LOSSY = NetConfig(policy=LinkPolicy(drop=0.25, delay=1, quant="int16"),
+                   schedule="partial:0.75", seed=3)
+
+CONFIGS = {
+    "vmap-dense": SolverConfig(iters=3, qp_iters=15),
+    "vmap-budgeted": SolverConfig(iters=3, qp_iters=15,
+                                  budget=PlanBudget(max_elems=256)),
+    "async-identity": SolverConfig(iters=3, qp_iters=15, net=NetConfig()),
+    "async-lossy": SolverConfig(iters=3, qp_iters=15, net=_LOSSY),
+}
+
+
+def _stage_schedule(sess):
+    """The Fig.-7 shape: run, membership events, run, more events, run."""
+    sess.run(3)
+    sess.drop_task(1)
+    sess.set_coupling(0.0, nodes=[2])
+    sess.run(3)
+    sess.add_task(1, nodes=[0, 1])
+    sess.run(2)
+    return sess
+
+
+# ---------------------------------------------------------------------------
+# the headline invariant, in-process backends
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_save_restore_continue_bitwise(tmp_path, name):
+    cfg = CONFIGS[name]
+    ref = _stage_schedule(_session(cfg))
+
+    # interrupted twin: snapshot through DISK after the first stage,
+    # then apply the remaining schedule to the restored session
+    twin = _session(cfg)
+    twin.run(3)
+    path = os.path.join(str(tmp_path), "sess.msgpack")
+    save_session(path, twin)
+    del twin
+    back = load_session(path)
+    back.drop_task(1)
+    back.set_coupling(0.0, nodes=[2])
+    back.run(3)
+    back.add_task(1, nodes=[0, 1])
+    back.run(2)
+    _assert_sessions_equal(back, ref)
+
+
+@pytest.mark.parametrize("name", ["vmap-dense", "async-lossy"])
+def test_save_restore_with_pending_events_bitwise(tmp_path, name):
+    """Snapshot taken BETWEEN membership events and the next run —
+    ``masks_dirty`` and the stale plan must round-trip."""
+    cfg = CONFIGS[name]
+    ref = _stage_schedule(_session(cfg))
+
+    twin = _session(cfg)
+    twin.run(3)
+    twin.drop_task(1)
+    twin.set_coupling(0.0, nodes=[2])        # dirty masks, old plan
+    path = os.path.join(str(tmp_path), "sess.msgpack")
+    save_session(path, twin)
+    back = load_session(path)
+    assert back._masks_dirty
+    back.run(3)
+    back.add_task(1, nodes=[0, 1])
+    back.run(2)
+    _assert_sessions_equal(back, ref)
+
+
+def test_fresh_session_snapshot_roundtrip(tmp_path):
+    """A never-run session (no state, no plan) round-trips too."""
+    cfg = CONFIGS["vmap-dense"]
+    sess = _session(cfg)
+    path = os.path.join(str(tmp_path), "s.msgpack")
+    save_session(path, sess)
+    back = load_session(path)
+    assert back.state is None and back._plan is None
+    back.run(3)
+    sess.run(3)
+    _assert_sessions_equal(back, sess)
+
+
+# ---------------------------------------------------------------------------
+# event-log replay
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(CONFIGS))
+def test_replay_from_log_bitwise(tmp_path, name):
+    cfg = CONFIGS[name]
+    log = EventLog()
+    ref = _stage_schedule(_session(cfg, log=log))
+
+    # through disk: the log serializes and replays identically
+    path = os.path.join(str(tmp_path), "run.events")
+    log.save(path)
+    twin = replay(EventLog.load(path))
+    _assert_sessions_equal(twin, ref)
+    if cfg.net is not None:
+        assert twin.net_report_["msgs_sent"] == \
+            ref.net_report_["msgs_sent"]
+
+
+def test_replay_prefix_time_travel():
+    """``upto`` replays any prefix of the history — the state equals a
+    session that only lived that prefix."""
+    cfg = CONFIGS["vmap-dense"]
+    log = EventLog()
+    sess = _session(cfg, log=log)
+    sess.run(3)
+    n_prefix = len(log)                      # init + run
+    sess.drop_task(1)
+    sess.run(2)
+
+    short = _session(cfg)
+    short.run(3)
+    twin = replay(log, upto=n_prefix)
+    _assert_sessions_equal(twin, short)
+
+
+def test_replay_requires_init():
+    log = EventLog()
+    log.append("run", iters=3, record=True)
+    with pytest.raises(ValueError, match="init"):
+        replay(log)
+
+
+def test_event_log_vocabulary():
+    with pytest.raises(ValueError, match="unknown event"):
+        EventLog().append("fit")
+
+
+# ---------------------------------------------------------------------------
+# SessionStore: retention + fallback on the step index
+# ---------------------------------------------------------------------------
+def test_session_store_retention_and_resume(tmp_path):
+    cfg = CONFIGS["vmap-dense"]
+    store = SessionStore(str(tmp_path), keep_last=2)
+    assert store.load() is None
+
+    ref = _session(cfg)
+    for _ in range(4):
+        ref.run(2)
+        store.save(ref)
+    assert store.steps() == [6, 8]           # keep_last=2 pruned 2, 4
+
+    back = store.load()
+    back.run(2)
+    ref.run(2)
+    _assert_sessions_equal(back, ref)
+
+
+def test_session_store_corrupt_head_falls_back(tmp_path):
+    cfg = CONFIGS["vmap-dense"]
+    store = SessionStore(str(tmp_path))
+    sess = _session(cfg)
+    sess.run(2)
+    store.save(sess)
+    sess.run(2)
+    store.save(sess)
+    # corrupt the newest snapshot on disk
+    with open(os.path.join(str(tmp_path), "ckpt_00000004.msgpack"),
+              "wb") as f:
+        f.write(b"not msgpack")
+    back = store.load()                      # falls back to step 2
+    assert back.iteration == 2
+    with pytest.raises(checkpoint.CheckpointError):
+        store.load(fallback=False)
+
+
+# ---------------------------------------------------------------------------
+# schema: fingerprint guard, migrations, version fencing
+# ---------------------------------------------------------------------------
+def test_restore_fingerprint_guard():
+    cfg = CONFIGS["vmap-dense"]
+    sess = _session(cfg)
+    sess.run(2)
+    tree = snapshot_session(sess)
+    tree["data"]["X"] = np.asarray(tree["data"]["X"]) + 1e-3  # drifted env
+    with pytest.raises(SchemaError, match="fingerprint"):
+        restore_session(tree)
+    back = restore_session(tree, check_fingerprint=False)  # escape hatch
+    assert back.iteration == 2
+
+
+def test_schema_newer_version_rejected():
+    cfg = CONFIGS["vmap-dense"]
+    tree = snapshot_session(_session(cfg))
+    tree["schema_version"] = schema_lib.SCHEMA_VERSION + 1
+    with pytest.raises(SchemaError, match="newer"):
+        restore_session(tree)
+
+
+def test_schema_missing_stamp_rejected():
+    with pytest.raises(SchemaError, match="schema_version"):
+        schema_lib.migrate({"kind": "online_session"})
+
+
+def test_schema_migration_hook_chains():
+    """A registered migration upgrades an old snapshot on load; an
+    unregistered gap fails loudly."""
+    cfg = CONFIGS["vmap-dense"]
+    sess = _session(cfg)
+    sess.run(2)
+    old = snapshot_session(sess)
+    old["schema_version"] = 0
+    old["legacy_masks"] = {"active": old.pop("active"),
+                           "couple": old.pop("couple")}
+
+    with pytest.raises(SchemaError, match="no migration"):
+        restore_session(dict(old))
+
+    @schema_lib.register_migration(0)
+    def _v0_to_v1(tree):
+        legacy = tree.pop("legacy_masks")
+        tree["active"] = legacy["active"]
+        tree["couple"] = legacy["couple"]
+        tree["schema_version"] = 1
+        return tree
+
+    try:
+        back = restore_session(dict(old))
+        assert back.iteration == 2
+        back.run(2)
+        sess.run(2)
+        _assert_sessions_equal(back, sess)
+    finally:
+        schema_lib._MIGRATIONS.pop(0)
+
+
+def test_config_roundtrip_exact():
+    cfg = CONFIGS["async-lossy"].replace(
+        budget=PlanBudget(max_elems=512, tile=(8, 128)),
+        backend_options={"topology": "ring"})
+    assert SolverConfig.from_dict(cfg.to_dict()) == cfg
+
+
+def test_config_rejects_runtime_backend_options():
+    cfg = SolverConfig(backend_options={"mesh": object()})
+    with pytest.raises(TypeError, match="mesh"):
+        cfg.to_dict()
+
+
+def test_netconfig_rejects_schedule_instances():
+    from repro.net import resolve_schedule
+    net = NetConfig(schedule=resolve_schedule("round_robin", seed=0))
+    with pytest.raises(TypeError, match="schedule"):
+        net.to_dict()
+
+
+# ---------------------------------------------------------------------------
+# multi-device backends + device-placement independence (subprocess)
+# ---------------------------------------------------------------------------
+_SUBPROC_COMMON = """
+    import os, numpy as np, jax, jax.numpy as jnp
+    from repro.api.session import OnlineSession
+    from repro.api.solvers import SolverConfig
+    from repro.store import save_session, load_session
+
+    V, T, N, P = 4, 2, 12, 3
+    rng = np.random.default_rng(0)
+    X = rng.normal(size=(V, T, N, P)).astype(np.float32)
+    y = np.sign(rng.normal(size=(V, T, N))).astype(np.float32)
+    adj = np.zeros((V, V), bool)
+    for v in range(V):
+        adj[v, (v + 1) % V] = adj[(v + 1) % V, v] = True
+
+    def assert_eq(a, b):
+        for x, z in zip(jax.tree_util.tree_leaves(a.state),
+                        jax.tree_util.tree_leaves(b.state)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+        assert a.iteration == b.iteration
+"""
+
+
+@pytest.mark.slow
+def test_save_restore_continue_shard_map_bitwise(tmp_path):
+    run_with_devices(_SUBPROC_COMMON + f"""
+    cfg = SolverConfig(iters=3, qp_iters=15, backend="shard_map",
+                       backend_options={{"topology": "graph"}})
+    ref = OnlineSession(X, y, adj=adj, config=cfg)
+    ref.run(3); ref.drop_task(1); ref.run(3)
+
+    twin = OnlineSession(X, y, adj=adj, config=cfg)
+    twin.run(3)
+    path = os.path.join({str(tmp_path)!r}, "s.msgpack")
+    save_session(path, twin)
+    back = load_session(path)
+    back.drop_task(1); back.run(3)
+    assert_eq(back, ref)
+    print("MATCH")
+    """, n_devices=V)
+
+
+@pytest.mark.slow
+def test_save_restore_continue_sample_shard_bitwise(tmp_path):
+    run_with_devices(_SUBPROC_COMMON + f"""
+    cfg = SolverConfig(iters=3, qp_iters=15, backend="sample_shard",
+                       backend_options={{"n_shards": 4,
+                                         "reduce": "gather"}})
+    ref = OnlineSession(X, y, adj=adj, config=cfg)
+    ref.run(3); ref.drop_task(1); ref.run(3)
+
+    twin = OnlineSession(X, y, adj=adj, config=cfg)
+    twin.run(3)
+    path = os.path.join({str(tmp_path)!r}, "s.msgpack")
+    save_session(path, twin)
+    back = load_session(path)
+    back.drop_task(1); back.run(3)
+    assert_eq(back, ref)
+    print("MATCH")
+    """, n_devices=4)
+
+
+@pytest.mark.slow
+def test_restore_under_different_default_device_bitwise(tmp_path):
+    """Save on device 0, restore + continue under a DIFFERENT jax
+    default device — placement must not leak into the values."""
+    run_with_devices(_SUBPROC_COMMON + f"""
+    cfg = SolverConfig(iters=3, qp_iters=15)
+    ref = OnlineSession(X, y, adj=adj, config=cfg)
+    ref.run(3); ref.drop_task(1); ref.run(3)
+
+    twin = OnlineSession(X, y, adj=adj, config=cfg)
+    twin.run(3)
+    path = os.path.join({str(tmp_path)!r}, "s.msgpack")
+    save_session(path, twin)
+    with jax.default_device(jax.devices()[1]):
+        back = load_session(path)
+        back.drop_task(1); back.run(3)
+        assert any(d.id == 1 for d in
+                   jax.tree_util.tree_leaves(back.state)[0].devices())
+    assert_eq(back, ref)
+    print("MATCH")
+    """, n_devices=2)
