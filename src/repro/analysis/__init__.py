@@ -1,0 +1,39 @@
+"""Static-analysis + sanitizer layer for the repro codebase.
+
+The repo's headline guarantee — every backend is mutually
+bitwise-exact — has historically been defended only by after-the-fact
+golden-fixture tests.  Two past regressions (the PR-3 python-float
+closure embedding as divergent HLO literals inside ``lax.scan``, and
+the PR-6 ``jnp.asarray`` silently downcasting 64-bit checkpoint leaves
+under x32) were both *statically detectable*.  This package turns
+those bug classes into machine-checked invariants:
+
+- :mod:`repro.analysis.linter` / :mod:`repro.analysis.rules` — an
+  AST-level lint engine with repo-specific rules, each born from a real
+  past bug (see ``docs/analysis.md`` for the catalog).
+- :mod:`repro.analysis.jaxpr_audit` — traces the real entry points and
+  audits the jaxprs for denied primitives / dtypes, plus the
+  ``trace_counter`` retrace/compile-count guard.
+- :mod:`repro.analysis.pallas_audit` — validates every
+  ``pl.pallas_call`` site's launch geometry against the (8, 128) TPU
+  layout, its static VMEM footprint, and oracle/fixture coverage.
+- :mod:`repro.analysis.substrate` — import-graph reachability report
+  marking seed-substrate packages (informational, never a failure).
+
+CLI: ``python -m repro.analysis src/repro [--format=json]`` — exits
+non-zero on any unsuppressed finding.  Suppress individual findings
+with ``# repro: noqa[rule-id] — reason`` (the reason is mandatory).
+"""
+from repro.analysis.linter import (Finding, lint_paths, lint_source,
+                                   render_text)
+from repro.analysis.rules import all_rules, get_rule
+from repro.analysis.jaxpr_audit import audit_fn, jit_cache_size, trace_counter
+from repro.analysis.pallas_audit import audit_kernels
+from repro.analysis.substrate import substrate_report
+
+__all__ = [
+    "Finding", "lint_paths", "lint_source", "render_text",
+    "all_rules", "get_rule",
+    "audit_fn", "jit_cache_size", "trace_counter",
+    "audit_kernels", "substrate_report",
+]

@@ -1,0 +1,187 @@
+"""Static checker for the Pallas kernels' launch geometry + coverage.
+
+Every ``pl.pallas_call`` in ``repro.kernels`` derives its geometry
+from a ``LaunchSpec`` builder (``gram.gram_launch_spec``,
+``qp_step.qp_launch_spec``) — pure functions of the logical shapes.
+This module validates those specs *without tracing a kernel*:
+
+- **tile alignment** — each 2-d block must sit on the f32 TPU layout:
+  minor (lane) dim a multiple of 128, second-minor (sublane) a
+  multiple of 8.  Degenerate dims are allowed where Mosaic allows
+  them: a dim of 1 (row-panel / scalar blocks are padded in-register)
+  or a block dim equal to the full padded array dim (grid-1 axes).
+- **divisibility** — every padded operand dim must be a whole number
+  of blocks (a ragged edge means silent out-of-bounds block reads).
+- **VMEM footprint** — the per-grid-step resident bytes (all blocks +
+  scratch) against a configurable budget (default half of the ~16 MiB
+  v5e per-core VMEM, leaving headroom for double buffering).
+- **coverage** — every ``pl.pallas_call`` site in ``kernels/`` must
+  belong to a registered kernel, have a jnp oracle in ``kernels/ref``
+  (the bitwise ground truth), and be exercised by the interpret-mode
+  fixtures in ``tests/test_kernels.py``.
+
+Geometry is checked at representative small / large / rectangular
+shapes, including the degenerate small-N case where blocks collapse
+to the full array.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional
+
+from repro.analysis.linter import Finding
+from repro.kernels.launch import LANE, SUBLANE, LaunchSpec
+
+#: default per-grid-step VMEM budget: half the ~16 MiB v5e per-core
+#: VMEM, the other half being pipeline double-buffering headroom.
+DEFAULT_VMEM_BUDGET = 8 * 1024 * 1024
+
+#: kernel entry point -> its jnp oracle in ``repro.kernels.ref``.
+ORACLES = {
+    "weighted_gram_2d": "weighted_gram",
+    "weighted_gram_tiled": "weighted_gram_rows",
+    "qp_pg_step_1d": "qp_pg_step",
+}
+
+
+def check_spec(spec: LaunchSpec, name: str,
+               vmem_budget: int = DEFAULT_VMEM_BUDGET
+               ) -> List[Finding]:
+    """Validate one launch geometry; findings carry ``name`` as path."""
+    findings: List[Finding] = []
+    blocks = (list(spec.in_blocks) + [spec.out_block]
+              + list(spec.scratch))
+    arrays = (list(spec.padded_in) + [spec.out_shape]
+              + list(spec.scratch))
+    for k, (blk, arr) in enumerate(zip(blocks, arrays)):
+        (s, l), (S, L) = blk, arr
+        if not (l % LANE == 0 or l == L or l == 1):
+            findings.append(Finding(
+                "pallas-misaligned-block", name, 0,
+                f"operand {k}: block {blk} lane dim {l} is neither a "
+                f"multiple of {LANE} nor the full array extent {L}"))
+        if not (s % SUBLANE == 0 or s == S or s == 1):
+            findings.append(Finding(
+                "pallas-misaligned-block", name, 0,
+                f"operand {k}: block {blk} sublane dim {s} is neither "
+                f"a multiple of {SUBLANE} nor the full array extent "
+                f"{S}"))
+        if S % s or L % l:
+            findings.append(Finding(
+                "pallas-grid-mismatch", name, 0,
+                f"operand {k}: padded array {arr} is not a whole "
+                f"number of {blk} blocks — ragged edges read out of "
+                "bounds"))
+    vmem = spec.vmem_bytes()
+    if vmem > vmem_budget:
+        findings.append(Finding(
+            "pallas-vmem-budget", name, 0,
+            f"per-step VMEM footprint {vmem} B exceeds the budget "
+            f"{vmem_budget} B — shrink the block/tile"))
+    return findings
+
+
+def audit_launch_geometry(vmem_budget: int = DEFAULT_VMEM_BUDGET
+                          ) -> List[Finding]:
+    """Check every kernel's spec at representative shapes: the tiny
+    paper-scale case (blocks collapse to the array), the large-n scale
+    path, and a rectangular streamed panel."""
+    from repro.kernels import gram, qp_step
+    from repro.kernels.launch import next_multiple
+
+    findings: List[Finding] = []
+    for M, N, D in ((24, 24, 11), (256, 4096, 64), (4096, 4096, 128)):
+        tm, tn = gram.align_tile(gram.DEFAULT_TILE, M, N)
+        findings += check_spec(
+            gram.gram_launch_spec(M, N, D, tm, tn),
+            f"gram_launch_spec[{M}x{N}xD{D}]", vmem_budget)
+    for N, D in ((24, 11), (1024, 128)):
+        bn = min(gram.DEFAULT_BLOCK,
+                 max(next_multiple(N, SUBLANE), SUBLANE))
+        findings += check_spec(
+            gram.gram_launch_spec(N, N, D, bn, bn),
+            f"gram_launch_spec[square {N}xD{D}]", vmem_budget)
+    for N in (24, 1024, 4096):
+        findings += check_spec(
+            qp_step.qp_launch_spec(N), f"qp_launch_spec[{N}]",
+            vmem_budget)
+    return findings
+
+
+def _pallas_call_sites(path: str):
+    """(enclosing function name, line) of each pallas_call in a file."""
+    with open(path, "r", encoding="utf-8") as fh:
+        tree = ast.parse(fh.read(), filename=path)
+    sites = []
+
+    def walk(node, owner):
+        for child in ast.iter_child_nodes(node):
+            name = owner
+            if isinstance(child, (ast.FunctionDef,
+                                  ast.AsyncFunctionDef)):
+                name = child.name
+            if isinstance(child, ast.Call):
+                fn = child.func
+                attr = fn.attr if isinstance(fn, ast.Attribute) else \
+                    (fn.id if isinstance(fn, ast.Name) else None)
+                if attr == "pallas_call":
+                    sites.append((owner, child.lineno))
+            walk(child, name)
+
+    walk(tree, "<module>")
+    return sites
+
+
+def audit_call_sites(repo_root: Optional[str] = None) -> List[Finding]:
+    """Every ``pl.pallas_call`` site in ``repro.kernels`` must belong
+    to a kernel registered in :data:`ORACLES`, with its oracle present
+    in ``kernels.ref`` and an interpret-mode fixture referencing it in
+    ``tests/test_kernels.py`` (fixture check skipped when the tests
+    tree is not on disk, e.g. an installed wheel)."""
+    import repro.kernels as kpkg
+    from repro.kernels import ref
+
+    kdir = os.path.dirname(os.path.abspath(kpkg.__file__))
+    if repo_root is None:
+        repo_root = os.path.dirname(os.path.dirname(
+            os.path.dirname(kdir)))
+    tests_path = os.path.join(repo_root, "tests", "test_kernels.py")
+    tests_src = None
+    if os.path.exists(tests_path):
+        with open(tests_path, "r", encoding="utf-8") as fh:
+            tests_src = fh.read()
+
+    findings: List[Finding] = []
+    for fname in sorted(os.listdir(kdir)):
+        if not fname.endswith(".py"):
+            continue
+        path = os.path.join(kdir, fname)
+        for owner, line in _pallas_call_sites(path):
+            if owner not in ORACLES:
+                findings.append(Finding(
+                    "pallas-unaudited-call", path, line,
+                    f"pallas_call inside {owner!r} has no entry in "
+                    "analysis.pallas_audit.ORACLES — register the "
+                    "kernel and its jnp oracle"))
+                continue
+            oracle = ORACLES[owner]
+            if not hasattr(ref, oracle):
+                findings.append(Finding(
+                    "pallas-missing-oracle", path, line,
+                    f"kernel {owner!r} maps to oracle "
+                    f"ref.{oracle}, which does not exist"))
+            if tests_src is not None and owner not in tests_src:
+                findings.append(Finding(
+                    "pallas-missing-fixture", path, line,
+                    f"kernel {owner!r} is never referenced by "
+                    "tests/test_kernels.py — add an interpret-vs-"
+                    "oracle fixture"))
+    return findings
+
+
+def audit_kernels(vmem_budget: int = DEFAULT_VMEM_BUDGET,
+                  repo_root: Optional[str] = None) -> List[Finding]:
+    """The full Pallas audit: launch geometry + site coverage."""
+    return (audit_launch_geometry(vmem_budget)
+            + audit_call_sites(repo_root))

@@ -120,6 +120,7 @@ def init_state(prob: DTSVMProblem) -> DTSVMState:
 def _default_nbr_reduce(prob: DTSVMProblem):
     """Sum an (V,T,D) array over each node's active neighbors (dense adj)."""
     adjf = prob.adj.astype(jnp.float32)
+    # repro: noqa[raw-einsum-in-plan] — deliberate: this einsum DEFINES the neighbor-sum semantics every backend (incl. Fabric.reduce) must match bitwise; golden fixtures pin it
     return lambda arr: jnp.einsum("vu,utd->vtd", adjf, arr)
 
 
@@ -130,6 +131,7 @@ def _counts(prob: DTSVMProblem, nbr_counts: Optional[jnp.ndarray] = None):
     ntp = (T_v - 1.0) * prob.couple[:, None] * active      # (V,T)
     ntp = jnp.maximum(ntp, 0.0)
     if nbr_counts is None:
+        # repro: noqa[raw-einsum-in-plan] — deliberate: integer-valued count contraction, exact in f32 for any summation order
         nbr_counts = jnp.einsum("vu,ut->vt", prob.adj.astype(jnp.float32),
                                 active)
     nbr = nbr_counts * active                              # inactive rows: 0
@@ -216,6 +218,7 @@ def dtsvm_step(state: DTSVMState, prob: DTSVMProblem,
             Kvt, qvt, hivt, iters=qp_iters, lam0=l0)))
     lam = solve(K, q, hi, state.lam)                        # eq. (6)
 
+    # repro: noqa[raw-einsum-in-plan] — deliberate: legacy oracle mirrors engine/plan.py's zl contraction exactly; tests assert oracle == engine bitwise
     zl = jnp.einsum("vtn,vtnd->vtd", lam, Z)                # X^T Y lam
     rhs = jnp.concatenate([zl, zl], axis=-1) - f            # [I,I]^T (...) - f
     r_new = rhs / u                                          # eq. (7)

@@ -37,8 +37,29 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.launch import LANE, SUBLANE, LaunchSpec, next_multiple
+
 DEFAULT_BLOCK = 256
 DEFAULT_TILE = (256, 256)
+
+
+def gram_launch_spec(M: int, N: int, D: int, tile_m: int, tile_n: int
+                     ) -> LaunchSpec:
+    """Geometry of one (possibly rectangular) weighted-Gram launch:
+    operands Zm (M, D), Zn (N, D), a (1, D) in ``(tile_m, tile_n)``
+    output blocks with the feature dim padded to the lane width.  The
+    kernels below launch exactly this; ``repro.analysis.pallas_audit``
+    validates it statically."""
+    Mp = next_multiple(M, tile_m)
+    Np = next_multiple(N, tile_n)
+    Dp = next_multiple(D, LANE)
+    return LaunchSpec(
+        grid=(Mp // tile_m, Np // tile_n),
+        in_blocks=((tile_m, Dp), (tile_n, Dp), (1, Dp)),
+        padded_in=((Mp, Dp), (Np, Dp), (1, Dp)),
+        out_block=(tile_m, tile_n),
+        out_shape=(Mp, Np),
+    )
 
 
 def _gram_kernel(zi_ref, zj_ref, a_ref, out_ref):
@@ -57,23 +78,22 @@ def weighted_gram_2d(Z: jnp.ndarray, a: jnp.ndarray, *,
                      interpret: bool = True) -> jnp.ndarray:
     """K = Z diag(a) Z^T for a single problem.  Z: (N, D), a: (D,)."""
     N, D = Z.shape
-    bn = min(block, max(_next_multiple(N, 8), 8))
-    Np = _next_multiple(N, bn)
-    Dp = _next_multiple(D, 128)
+    bn = min(block, max(_next_multiple(N, SUBLANE), SUBLANE))
+    spec = gram_launch_spec(N, N, D, bn, bn)
+    (Np, Dp) = spec.padded_in[0]
     Zp = jnp.pad(Z, ((0, Np - N), (0, Dp - D))).astype(jnp.float32)
     ap = jnp.pad(a, (0, Dp - D)).astype(jnp.float32)[None, :]   # (1, Dp)
 
-    grid = (Np // bn, Np // bn)
     out = pl.pallas_call(
         _gram_kernel,
-        grid=grid,
+        grid=spec.grid,
         in_specs=[
-            pl.BlockSpec((bn, Dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((bn, Dp), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, Dp), lambda i, j: (0, 0)),
+            pl.BlockSpec(spec.in_blocks[0], lambda i, j: (i, 0)),
+            pl.BlockSpec(spec.in_blocks[1], lambda i, j: (j, 0)),
+            pl.BlockSpec(spec.in_blocks[2], lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((bn, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Np, Np), jnp.float32),
+        out_specs=pl.BlockSpec(spec.out_block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(spec.out_shape, jnp.float32),
         interpret=interpret,
     )(Zp, Zp, ap)
     return out[:N, :N]
@@ -84,8 +104,10 @@ def align_tile(tile, m: int, n: int):
     tile_m up to a multiple of 8 (sublanes), tile_n up to a multiple of
     128 (lanes), each capped at the padded extent of its axis."""
     tm, tn = tile
-    tm = min(_next_multiple(max(int(tm), 1), 8), _next_multiple(m, 8))
-    tn = min(_next_multiple(max(int(tn), 1), 128), _next_multiple(n, 128))
+    tm = min(_next_multiple(max(int(tm), 1), SUBLANE),
+             _next_multiple(m, SUBLANE))
+    tn = min(_next_multiple(max(int(tn), 1), LANE),
+             _next_multiple(n, LANE))
     return tm, tn
 
 
@@ -104,28 +126,25 @@ def weighted_gram_tiled(Zm: jnp.ndarray, a: jnp.ndarray,
     M, D = Zm.shape
     N, _ = Zn.shape
     tm, tn = align_tile(tile, M, N)
-    Mp = _next_multiple(M, tm)
-    Np = _next_multiple(N, tn)
-    Dp = _next_multiple(D, 128)
+    spec = gram_launch_spec(M, N, D, tm, tn)
+    (Mp, Dp), (Np, _) = spec.padded_in[0], spec.padded_in[1]
     Zmp = jnp.pad(Zm, ((0, Mp - M), (0, Dp - D))).astype(jnp.float32)
     Znp = jnp.pad(Zn, ((0, Np - N), (0, Dp - D))).astype(jnp.float32)
     ap = jnp.pad(a, (0, Dp - D)).astype(jnp.float32)[None, :]    # (1, Dp)
 
-    grid = (Mp // tm, Np // tn)
     out = pl.pallas_call(
         _gram_kernel,
-        grid=grid,
+        grid=spec.grid,
         in_specs=[
-            pl.BlockSpec((tm, Dp), lambda i, j: (i, 0)),
-            pl.BlockSpec((tn, Dp), lambda i, j: (j, 0)),
-            pl.BlockSpec((1, Dp), lambda i, j: (0, 0)),
+            pl.BlockSpec(spec.in_blocks[0], lambda i, j: (i, 0)),
+            pl.BlockSpec(spec.in_blocks[1], lambda i, j: (j, 0)),
+            pl.BlockSpec(spec.in_blocks[2], lambda i, j: (0, 0)),
         ],
-        out_specs=pl.BlockSpec((tm, tn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        out_specs=pl.BlockSpec(spec.out_block, lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(spec.out_shape, jnp.float32),
         interpret=interpret,
     )(Zmp, Znp, ap)
     return out[:M, :N]
 
 
-def _next_multiple(x: int, m: int) -> int:
-    return -(-x // m) * m
+_next_multiple = next_multiple

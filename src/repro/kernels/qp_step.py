@@ -22,7 +22,30 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.launch import LANE, LaunchSpec, next_multiple
+
 DEFAULT_BLOCK = 256
+
+
+def qp_launch_spec(N: int, block: int = DEFAULT_BLOCK) -> LaunchSpec:
+    """Geometry of one fused QP-step launch: K (N, N) in (bn, bn)
+    tiles, the four vectors as (1, bn) row panels, the scalar gamma as
+    a (1, 1) block, one (1, bn) VMEM accumulator.  The kernel below
+    launches exactly this; ``repro.analysis.pallas_audit`` validates
+    it statically."""
+    bn = min(block, max(next_multiple(N, LANE), LANE))
+    Np = next_multiple(N, bn)
+    n = Np // bn
+    return LaunchSpec(
+        grid=(n, n),
+        in_blocks=((bn, bn), (1, bn), (1, bn), (1, bn), (1, bn),
+                   (1, 1)),
+        padded_in=((Np, Np), (1, Np), (1, Np), (1, Np), (1, Np),
+                   (1, 1)),
+        out_block=(1, bn),
+        out_shape=(1, Np),
+        scratch=((1, bn),),
+    )
 
 
 def _qp_step_kernel(K_ref, lamc_ref, lamr_ref, q_ref, hi_ref, gamma_ref,
@@ -56,8 +79,8 @@ def qp_pg_step_1d(lam, K, q, hi, gamma, *, block: int = DEFAULT_BLOCK,
     Padding rows get hi=0, so their duals are projected back to 0 and they
     never contribute to the matvec (K padding is zero)."""
     N = lam.shape[0]
-    bn = min(block, max(_next_multiple(N, 128), 128))
-    Np = _next_multiple(N, bn)
+    spec = qp_launch_spec(N, block)
+    Np = spec.out_shape[1]
     pad = Np - N
     lam_p = jnp.pad(lam, (0, pad)).astype(jnp.float32)[None, :]
     q_p = jnp.pad(q, (0, pad)).astype(jnp.float32)[None, :]
@@ -65,25 +88,24 @@ def qp_pg_step_1d(lam, K, q, hi, gamma, *, block: int = DEFAULT_BLOCK,
     K_p = jnp.pad(K, ((0, pad), (0, pad))).astype(jnp.float32)
     gamma_arr = jnp.asarray(gamma, jnp.float32).reshape(1, 1)
 
-    n_row = n_col = Np // bn
+    n_col = spec.grid[1]
     out = pl.pallas_call(
         functools.partial(_qp_step_kernel, n_col=n_col),
-        grid=(n_row, n_col),
+        grid=spec.grid,
         in_specs=[
-            pl.BlockSpec((bn, bn), lambda i, j: (i, j)),   # K tile
-            pl.BlockSpec((1, bn), lambda i, j: (0, j)),    # lam (column slice)
-            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # lam (row slice)
-            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # q
-            pl.BlockSpec((1, bn), lambda i, j: (0, i)),    # hi
-            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),     # gamma
+            pl.BlockSpec(spec.in_blocks[0], lambda i, j: (i, j)),  # K
+            pl.BlockSpec(spec.in_blocks[1], lambda i, j: (0, j)),  # lam (col)
+            pl.BlockSpec(spec.in_blocks[2], lambda i, j: (0, i)),  # lam (row)
+            pl.BlockSpec(spec.in_blocks[3], lambda i, j: (0, i)),  # q
+            pl.BlockSpec(spec.in_blocks[4], lambda i, j: (0, i)),  # hi
+            pl.BlockSpec(spec.in_blocks[5], lambda i, j: (0, 0)),  # gamma
         ],
-        out_specs=pl.BlockSpec((1, bn), lambda i, j: (0, i)),
-        out_shape=jax.ShapeDtypeStruct((1, Np), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((1, bn), jnp.float32)],
+        out_specs=pl.BlockSpec(spec.out_block, lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct(spec.out_shape, jnp.float32),
+        scratch_shapes=[pltpu.VMEM(spec.scratch[0], jnp.float32)],
         interpret=interpret,
     )(K_p, lam_p, lam_p, q_p, hi_p, gamma_arr)
     return out[0, :N]
 
 
-def _next_multiple(x: int, m: int) -> int:
-    return -(-x // m) * m
+_next_multiple = next_multiple

@@ -10,6 +10,7 @@ def weighted_gram(Z: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
     This is the dual Hessian of DTSVM's QP (6):
     K = (Y X~) [I,I] U^{-1} [I,I]^T (Y X~)^T with diagonal U.
     """
+    # repro: noqa[raw-einsum-in-plan] — deliberate: this oracle DEFINES the Gram semantics the Pallas kernels must reproduce bitwise (interpret-vs-oracle tests)
     return jnp.einsum("...nd,...d,...md->...nm", Z, a.astype(Z.dtype), Z)
 
 
@@ -25,6 +26,7 @@ def weighted_gram_rows(Zm: jnp.ndarray, a: jnp.ndarray,
     K[i, j] reduces over the same D terms in the same order regardless
     of which panel it lands in).
     """
+    # repro: noqa[raw-einsum-in-plan] — deliberate: identical per-element contraction as weighted_gram (the streamed/sharded builds rely on panel == full bitwise)
     return jnp.einsum("...nd,...d,...md->...nm", Zm, a.astype(Zm.dtype), Zn)
 
 
@@ -42,5 +44,6 @@ def qp_pg_step(lam: jnp.ndarray, K: jnp.ndarray, q: jnp.ndarray,
     gamma = jnp.asarray(gamma, lam.dtype)
     if gamma.ndim:
         gamma = gamma.reshape(gamma.shape + (1,) * (lam.ndim - gamma.ndim))
+    # repro: noqa[raw-einsum-in-plan] — deliberate: the matvec oracle the fused Pallas QP step is tested bitwise against
     grad = q - jnp.einsum("...nm,...m->...n", K, lam)
     return jnp.clip(lam + gamma * grad, 0.0, hi)

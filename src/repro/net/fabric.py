@@ -193,7 +193,10 @@ class Fabric:
         """
         T = payload.shape[1]
         if task_counts is None:
-            task_counts = jnp.full((self.V,), float(T), jnp.float32)
+            # T is a static shape int; jnp.full casts it exactly —
+            # float() here would bake a host-computed literal into the
+            # trace (host-sync-in-hot-path)
+            task_counts = jnp.full((self.V,), T, jnp.float32)
         nvec = task_counts[None, :]                # per edge [v, u]: u's
         sending = act > 0                          # (V,) senders
         if self.mode == "buffer":
@@ -268,6 +271,7 @@ class Fabric:
         the keystone of the bitwise-identity guarantee.
         """
         if self.mode == "buffer":
+            # repro: noqa[raw-einsum-in-plan] — deliberate: must be the EXACT expression of core._default_nbr_reduce (the bitwise-identity keystone); tests pin async == sync
             return jnp.einsum("vu,utd->vtd", self.adjf, st.mailbox)
         return jnp.sum(self.adjf[:, :, None, None] * st.mailbox, axis=1)
 
@@ -307,8 +311,11 @@ def restore_state(tree) -> FabricState:
             f"fabric snapshot fields {sorted(got)} do not match "
             f"FabricState{sorted(want)}; run a schema migration "
             f"(repro.store.schema) before restoring")
-    kw = {k: jnp.asarray(v) for k, v in tree.items()}
-    # the ok-history ring is boolean; msgpack round-trips it as bool,
-    # but guard against a widened decode
-    kw["ok_hist"] = kw["ok_hist"].astype(bool)
+    # dtypes pinned per field — a bare jnp.asarray would silently
+    # downcast 64-bit leaves under x32 (the PR-6 bug class), and the
+    # round counter / ok ring must come back as int32 / bool even from
+    # a widened decode
+    dtypes = {"round": jnp.int32, "ok_hist": jnp.bool_}
+    kw = {k: jnp.asarray(v, dtypes.get(k, jnp.float32))
+          for k, v in tree.items()}
     return FabricState(**kw)

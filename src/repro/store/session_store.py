@@ -123,13 +123,17 @@ def restore_session(tree: Any, *, check_fingerprint: bool = True
         active=np.asarray(tree["active"]),
         couple=np.asarray(tree["couple"]), jit=bool(tree["jit"]))
     if tree["test"] is not None:
-        sess._test = (jnp.asarray(tree["test"]["X"]),
-                      jnp.asarray(tree["test"]["y"]))
+        # dtype pinned: a bare jnp.asarray would silently downcast
+        # 64-bit snapshot leaves under x32 (the PR-6 bug class)
+        sess._test = (jnp.asarray(tree["test"]["X"], jnp.float32),
+                      jnp.asarray(tree["test"]["y"], jnp.float32))
     if tree["state"] is not None:
         st = tree["state"]
         sess.state = core.DTSVMState(
-            r=jnp.asarray(st["r"]), alpha=jnp.asarray(st["alpha"]),
-            beta=jnp.asarray(st["beta"]), lam=jnp.asarray(st["lam"]))
+            r=jnp.asarray(st["r"], jnp.float32),
+            alpha=jnp.asarray(st["alpha"], jnp.float32),
+            beta=jnp.asarray(st["beta"], jnp.float32),
+            lam=jnp.asarray(st["lam"], jnp.float32))
     sess.iteration = int(tree["iteration"])
     sess.history = [np.asarray(h) for h in tree["history"]]
     sess._masks_dirty = bool(tree["masks_dirty"])

@@ -1,0 +1,7 @@
+"""GOOD: env-keyed dtype behavior goes through the blessed
+dist.compat shim (the only module allowed to read the switch)."""
+from repro.dist import compat
+
+
+def wants_x64():
+    return compat.jnp_float_bits() == 64

@@ -1,0 +1,16 @@
+"""BAD: host-sync-in-hot-path — host round-trips in functions
+reachable from a traced hot root (bare names match HOT_ROOTS; the
+helper is reached through the same-module call graph)."""
+import numpy as np
+
+
+def _log_residual(r):
+    print("residual", r)
+    return r.item()
+
+
+def plan_step(state, g):
+    nrm = np.linalg.norm(g)
+    v = float(state)
+    _log_residual(nrm)
+    return state - v * g

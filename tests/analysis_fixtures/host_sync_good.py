@@ -1,0 +1,14 @@
+"""GOOD: the traced step stays pure jnp (jax.debug.print is the
+sanctioned escape hatch); numpy/float live in host-side drivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def plan_step(state, g):
+    jax.debug.print("residual {x}", x=jnp.linalg.norm(g))
+    return state - g
+
+
+def summarize(hist):
+    return float(np.mean(np.asarray(hist)))

@@ -1,0 +1,19 @@
+"""The exact PR-3 bug: hyper-parameters held as python floats and
+closed over by the ADMM scan body.  The scalars embed as HLO literals,
+so the scan compiles a different program than the operand-passing
+sweep loop.  Fixed historically by storing DTSVMProblem scalars as 0-d
+f32 arrays."""
+import jax
+
+
+def run_admm(state, iters):
+    C = 0.1
+    eta = 2.0 * 0.25
+
+    def admm_body(carry, _):
+        r, lam = carry
+        r = r - eta * (r - lam) * C
+        return (r, lam), None
+
+    (r, lam), _ = jax.lax.scan(admm_body, state, None, length=iters)
+    return r

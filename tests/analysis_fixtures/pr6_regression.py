@@ -1,0 +1,13 @@
+"""The exact PR-6 bug: msgpack checkpoint decode rebuilt leaves with
+a bare jnp.asarray, silently downcasting saved f64 to f32 under the
+default x32 config and breaking the byte-identical restore promise.
+Fixed historically by decoding to numpy."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def _decode(obj):
+    if isinstance(obj, dict) and obj.get("__ndarray__"):
+        raw = np.frombuffer(obj["data"], np.dtype(obj["dtype"]))
+        return jnp.asarray(raw.reshape(obj["shape"]))
+    return obj

@@ -1,0 +1,7 @@
+"""BAD: raw-einsum-in-plan — einsum in the traced hot set without a
+batching-stability attestation."""
+import jax.numpy as jnp
+
+
+def consensus_update(r, adj):
+    return jnp.einsum("uv,vtd->utd", adj, r)

@@ -1,0 +1,11 @@
+"""GOOD: hot-path contractions use the mul+reduce form; einsum in a
+host-side diagnostic (not reachable from a hot root) is fine."""
+import jax.numpy as jnp
+
+
+def consensus_update(r, adj):
+    return jnp.sum(adj[:, :, None, None] * r[None], axis=1)
+
+
+def gram_diagnostic(Z, a):
+    return jnp.einsum("nd,d,md->nm", Z, a, Z)

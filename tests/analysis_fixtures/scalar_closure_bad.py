@@ -1,0 +1,18 @@
+"""BAD: scalar-closure-in-scan — python scalars captured by traced
+bodies (parsed by tests/test_analysis.py only, never imported)."""
+import jax
+
+
+def fit(prob):
+    rho = 0.5
+
+    def body(carry, _):
+        return carry * rho, None
+
+    out, _ = jax.lax.scan(body, prob, None, length=3)
+    return out
+
+
+def fit_lambda(state):
+    gamma = 1.0 / 8.0
+    return jax.lax.fori_loop(0, 4, lambda i, s: s * gamma, state)

@@ -1,0 +1,22 @@
+"""GOOD: scan bodies close over 0-d jnp arrays or take operands —
+the fixed form of the PR-3 pattern."""
+import jax
+import jax.numpy as jnp
+
+
+def fit(prob):
+    rho = jnp.float32(0.5)
+
+    def body(carry, _):
+        return carry * rho, None
+
+    out, _ = jax.lax.scan(body, prob, None, length=3)
+    return out
+
+
+def fit_operand(prob, rho):
+    def body(carry, x):
+        return carry * rho + x, None
+
+    out, _ = jax.lax.scan(body, prob, jnp.arange(3.0))
+    return out

@@ -1,0 +1,12 @@
+"""BAD: silent-downcast — bare jnp.asarray/jnp.array on restore
+paths (downcasts 64-bit leaves under x32)."""
+import jax.numpy as jnp
+
+
+def restore_state(tree):
+    return {k: jnp.asarray(v) for k, v in tree.items()}
+
+
+def load_weights(blob):
+    w = jnp.array(blob["w"])
+    return w

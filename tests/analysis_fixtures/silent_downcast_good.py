@@ -1,0 +1,16 @@
+"""GOOD: restore paths pin the dtype or stay in numpy; a non-restore
+helper may use jnp.asarray freely."""
+import jax.numpy as jnp
+import numpy as np
+
+
+def restore_state(tree):
+    return {k: jnp.asarray(v, jnp.float32) for k, v in tree.items()}
+
+
+def load_weights(blob):
+    return np.asarray(blob["w"])
+
+
+def project(x):
+    return jnp.asarray(x)

@@ -1,0 +1,17 @@
+"""Suppression mechanics fixture: a reasoned noqa suppresses (same
+line or line above); a bare noqa does not and is itself a finding; an
+unknown rule id and an unparseable directive are flagged."""
+import jax.numpy as jnp
+
+
+def consensus_update(r, adj):
+    # repro: noqa[raw-einsum-in-plan] — fixture attestation: stands in for a memory-bound contraction
+    a = jnp.einsum("uv,vtd->utd", adj, r)
+    b = jnp.einsum("uv,vtd->utd", adj, r)  # repro: noqa[raw-einsum-in-plan]
+    c = jnp.einsum("uv,vtd->utd", adj, r)  # repro: noqa[no-such-rule] — not a rule
+    d = jnp.einsum("uv,vtd->utd", adj, r)  # repro: skip-this-line
+    return a + b + c + d
+
+
+def plan_step(state, g):
+    return jnp.einsum("nd,d->n", state, g)  # repro: noqa[*] — fixture: wildcard attestation

@@ -1,0 +1,7 @@
+"""BAD: untiled-gram-call — a bare weighted_gram call silently
+reverts to the dense (N, N) build, bypassing the PlanBudget path."""
+from repro.kernels import ops
+
+
+def build_invariants(Z, a):
+    return ops.weighted_gram(Z, a)

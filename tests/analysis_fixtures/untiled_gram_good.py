@@ -1,0 +1,7 @@
+"""GOOD: gram builds pass tile= so large-n problems stream panels
+under the memory budget."""
+from repro.kernels import ops
+
+
+def build_invariants(Z, a):
+    return ops.weighted_gram(Z, a, tile=(256, 256))

@@ -1,7 +1,7 @@
 """Docstring coverage on the public API (the docs lane's second gate).
 
-Every public symbol of the ``repro.api``, ``repro.store`` and
-``repro.serve`` modules — plus the engine's
+Every public symbol of the ``repro.api``, ``repro.store``,
+``repro.serve`` and ``repro.analysis`` modules — plus the engine's
 compile entry points and the net policy types — must carry a docstring,
 and so must every public method they define.  "Public" means not
 underscore-prefixed and actually defined in the module under test
@@ -9,6 +9,12 @@ underscore-prefixed and actually defined in the module under test
 """
 import inspect
 
+import repro.analysis
+import repro.analysis.jaxpr_audit
+import repro.analysis.linter
+import repro.analysis.pallas_audit
+import repro.analysis.rules
+import repro.analysis.substrate
 import repro.api
 import repro.api.backends
 import repro.api.evaluate
@@ -26,6 +32,12 @@ from repro.engine.sweep import compile_sweep
 from repro.net.policies import LinkPolicy, NetConfig
 
 MODULES = [
+    repro.analysis,
+    repro.analysis.jaxpr_audit,
+    repro.analysis.linter,
+    repro.analysis.pallas_audit,
+    repro.analysis.rules,
+    repro.analysis.substrate,
     repro.api,
     repro.api.backends,
     repro.api.evaluate,
