@@ -110,6 +110,59 @@ def _bench_sweep(iters, qp_iters, *, V=10, n_per_task=(50, 400),
     }
 
 
+def _bench_qp_modes(*, V=10, T=2, n_per_vt=128, p=10, iters=40,
+                    qp_iters=100, n_test=800, seed=0):
+    """Risk-delta table for the QP operating modes: f32 materialized
+    (the default contract) vs bf16 streamed-K vs the factored low-rank
+    operator, all through the fused multi-iteration engine.  The f32
+    multi fit is asserted BITWISE equal to iterating the single-step
+    fused engine (the per-dispatch-path contract); bf16 and factored
+    are opt-in approximations validated here by their risk deltas."""
+    from repro.api import DTSVM, SolverConfig
+
+    n_train = np.full((V, T), n_per_vt, int)
+    data = synthetic.make_multitask_data(V=V, T=T, p=p, n_train=n_train,
+                                         n_test=n_test, seed=seed)
+    A = graph.make_graph("random", V, degree=0.8, seed=seed)
+    base = SolverConfig(C=0.01, iters=iters, qp_iters=qp_iters,
+                        qp_solver="pallas_fused_multi")
+    modes = {
+        "fused_iterated": base.replace(qp_solver="pallas_fused"),
+        "f32_materialized": base,
+        "bf16_materialized": base.replace(qp_precision="bf16"),
+        "f32_factored": base.replace(qp_operator="factored"),
+    }
+    X = jnp.asarray(data["X"], jnp.float32)
+    y = jnp.asarray(data["y"], jnp.float32)
+    mask = jnp.asarray(data["mask"], jnp.float32)
+    jax.block_until_ready(X)
+    out = {"config": {"V": V, "T": T, "N": n_per_vt, "p": p,
+                      "iters": iters, "qp_iters": qp_iters,
+                      "backend": jax.default_backend()},
+           "modes": {}}
+    risks, states = {}, {}
+    for name, cfg in modes.items():
+        solver = DTSVM(cfg)
+        t0 = time.time()
+        solver.fit(X, y, mask=mask, adj=A)
+        jax.block_until_ready(solver.state_.r)
+        dt = time.time() - t0
+        states[name] = solver.state_
+        risks[name] = np.asarray(solver.risks(data["X_test"],
+                                              data["y_test"]))
+        out["modes"][name] = {"fit_s": round(dt, 3),
+                              "mean_risk": float(risks[name].mean())}
+    for a, b in zip(jax.tree.leaves(states["f32_materialized"]),
+                    jax.tree.leaves(states["fused_iterated"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    out["modes"]["f32_materialized"]["bitwise_equals_fused_iterated"] = \
+        True
+    for name in ("bf16_materialized", "f32_factored"):
+        out["modes"][name]["max_abs_risk_delta_vs_f32"] = float(
+            np.max(np.abs(risks[name] - risks["f32_materialized"])))
+    return out
+
+
 def _legacy_run(prob, iters, qp_iters, state):
     def body(st, _):
         return core.dtsvm_step(st, prob, qp_iters), jnp.float32(0)
@@ -203,15 +256,26 @@ def run(fast: bool = False):
     if fast:
         return {"paper": _bench_one(8, 2, 32, 10, 10, 50),
                 "sweep": _bench_sweep(8, 40, c_grid=(0.01, 0.1),
-                                      e2_grid=(1.0, 10.0), repeats=1)}
+                                      e2_grid=(1.0, 10.0), repeats=1),
+                "qp_modes": _bench_qp_modes(V=4, T=2, n_per_vt=24,
+                                            iters=8, qp_iters=30,
+                                            n_test=64)}
     recs = {
         "paper": _bench_one(30, 4, 256, 10, 60, 100),
         "wide_p64": _bench_one(30, 4, 256, 64, 60, 100),
         "sweep": _bench_sweep(60, 100),
+        "qp_modes": _bench_qp_modes(),
     }
     # fast mode is a smoke run on a toy config — never clobber the
-    # committed paper-regime perf-trajectory record with it
-    with open(os.path.join(ROOT, "BENCH_fit.json"), "w") as f:
+    # committed paper-regime perf-trajectory record with it; a full run
+    # rewrites only the sections it owns (roofline.py keeps its own)
+    path = os.path.join(ROOT, "BENCH_fit.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+        old.update(recs)
+        recs = old
+    with open(path, "w") as f:
         json.dump(recs, f, indent=2)
         f.write("\n")
     return recs
@@ -220,12 +284,26 @@ def run(fast: bool = False):
 def main(fast=False):
     recs = run(fast)
     for name, rec in recs.items():
+        if name == "roofline":        # owned by roofline.py, preserved
+            continue
         if name == "sweep":
             emit("bench_fit_sweep", 1e3 * rec["batched_ms_per_fit"],
                  f"sweep_speedup={rec['speedup']:.2f}x "
                  f"serial_ms_fit={rec['serial_ms_per_fit']:.1f} "
                  f"batched_ms_fit={rec['batched_ms_per_fit']:.1f} "
                  f"configs={rec['config']['n_configs']}")
+            continue
+        if name == "qp_modes":
+            m = rec["modes"]
+            emit("bench_fit_qp_modes",
+                 1e6 * m["f32_materialized"]["fit_s"],
+                 f"bitwise_f32_vs_iterated="
+                 f"{m['f32_materialized']['bitwise_equals_fused_iterated']} "
+                 f"bf16_risk_delta="
+                 f"{m['bf16_materialized']['max_abs_risk_delta_vs_f32']:.4f} "
+                 f"factored_risk_delta="
+                 f"{m['f32_factored']['max_abs_risk_delta_vs_f32']:.4f} "
+                 f"factored_fit_s={m['f32_factored']['fit_s']}")
             continue
         emit(f"bench_fit_{name}",
              1e3 * rec["scan"]["planned_ms_per_iter"],

@@ -19,9 +19,13 @@ Sections of ``BENCH_scale.json``:
                     RSS are recorded for both, plus the analytic
                     workspace-elems accounting per configuration.
 - ``large_fit``     full budgeted fits at the same regime across QP
-                    engines (``fista``, ``pallas_fused``) and backends
-                    (``vmap``, ``async``); the async identity fabric is
-                    asserted bitwise equal to vmap.
+                    engines (``fista``, ``pallas_fused``,
+                    ``pallas_fused_multi``) and backends (``vmap``,
+                    ``async``), plus a ``qp_operator="factored"`` row
+                    that skips the N^2 Gram build entirely (the
+                    low-rank headline win); the async identity fabric
+                    is asserted bitwise equal to vmap and the multi
+                    engine bitwise equal to the iterated fused engine.
 - ``equivalence``   a moderate regime where dense still fits: budgeted
                     and dense fits asserted bitwise identical across
                     the same engine/backend grid, with build timings.
@@ -168,11 +172,14 @@ def _make_problem(V, T, N, p, seed=0):
     return core.make_problem(X, y, None, A, C=0.01)
 
 
+_ENGINES = ("fista", "pallas_fused", "pallas_fused_multi")
+
+
 def _bench_fits(*, V, T, N, p, iters, qp_iters, max_elems,
                 assert_dense_equal):
-    """Budgeted fits across (qp engine) x (backend); optionally assert
-    bitwise equality against the dense plan (the moderate regime where
-    dense still fits)."""
+    """Budgeted fits across (qp engine) x (backend) plus the factored
+    low-rank operator; optionally assert bitwise equality against the
+    dense plan (the moderate regime where dense still fits)."""
     prob = _make_problem(V, T, N, p)
     budget = engine.PlanBudget(max_elems=max_elems)
     jax.block_until_ready(prob.X)
@@ -182,7 +189,7 @@ def _bench_fits(*, V, T, N, p, iters, qp_iters, max_elems,
             "accounting": _workspace_elems(V, T, N, budget),
             "fits": []}
     states = {}
-    for qp_solver in ("fista", "pallas_fused"):
+    for qp_solver in _ENGINES:
         dense_state = None
         if assert_dense_equal:
             st, _ = backends.run(prob, iters, backend="vmap",
@@ -205,12 +212,41 @@ def _bench_fits(*, V, T, N, p, iters, qp_iters, max_elems,
                                                   np.asarray(z))
                 entry["bitwise_equals_dense"] = True
             recs["fits"].append(entry)
-    # the async identity fabric must reproduce vmap bitwise, budget or not
-    for qp_solver in ("fista", "pallas_fused"):
+    # the async identity fabric must reproduce vmap bitwise, budget or
+    # not; the fused multi engine must reproduce the iterated fused
+    # engine bitwise per backend (the shared f32 oracle dispatch path)
+    for qp_solver in _ENGINES:
         for x, z in zip(jax.tree.leaves(states[(qp_solver, "vmap")]),
                         jax.tree.leaves(states[(qp_solver, "async")])):
             np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+    for backend in ("vmap", "async"):
+        for x, z in zip(
+                jax.tree.leaves(states[("pallas_fused", backend)]),
+                jax.tree.leaves(states[("pallas_fused_multi", backend)])):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
     recs["async_identity_bitwise"] = True
+    recs["multi_bitwise_equals_fused"] = True
+    # the factored low-rank operator: K = Z diag(a) Z^T is rank <= p+1,
+    # so the fit skips the N^2 Gram build entirely (vmap-only mode; not
+    # bitwise vs materialized — validated by state deltas instead)
+    t0 = time.time()
+    st_f, _ = backends.run(prob, iters, backend="vmap",
+                           qp_iters=qp_iters,
+                           qp_solver="pallas_fused_multi",
+                           qp_operator="factored", budget=budget)
+    jax.block_until_ready(st_f.r)
+    dt_f = time.time() - t0
+    st_m = states[("pallas_fused_multi", "vmap")]
+    max_dr = float(np.max(np.abs(np.asarray(st_f.r) -
+                                 np.asarray(st_m.r))))
+    recs["fits"].append({"qp_solver": "pallas_fused_multi",
+                         "backend": "vmap", "qp_operator": "factored",
+                         "fit_s": round(dt_f, 3),
+                         "max_abs_r_delta_vs_materialized": max_dr})
+    fused_vmap = next(e["fit_s"] for e in recs["fits"]
+                      if e["qp_solver"] == "pallas_fused"
+                      and e["backend"] == "vmap")
+    recs["factored_speedup_vs_fused_vmap"] = round(fused_vmap / dt_f, 3)
     return recs
 
 
@@ -254,13 +290,16 @@ def main(fast=False, out=None):
     lb = recs["large_build"]
     dense_unc = lb["dense"]["uncapped"]
     budg_unc = lb["budgeted"]["uncapped"]
+    fits = recs.get("large_fit") or recs.get("equivalence")
     emit("bench_scale",
          1e6 * budg_unc.get("seconds", float("nan")),
          f"dense_oom_under_cap={lb['dense_oom_under_cap']} "
          f"budgeted_fits_under_cap={lb['budgeted_fits_under_cap']} "
          f"build_speedup={lb.get('build_speedup', 'n/a')} "
          f"peak_rss_dense_gb={dense_unc.get('peak_rss_gb', 'oom')} "
-         f"peak_rss_budgeted_gb={budg_unc.get('peak_rss_gb', 'n/a')}")
+         f"peak_rss_budgeted_gb={budg_unc.get('peak_rss_gb', 'n/a')} "
+         f"factored_speedup="
+         f"{fits.get('factored_speedup_vs_fused_vmap', 'n/a')}x")
 
 
 if __name__ == "__main__":

@@ -44,7 +44,7 @@ def main() -> None:
         "scale": bench_scale.main,
         "serve": bench_serve.main,
         "kernels": kernels_bench.main,
-        "roofline": lambda fast: roofline.main([]),
+        "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else None
 

@@ -42,6 +42,7 @@ ORACLES = {
     "weighted_gram_2d": "weighted_gram",
     "weighted_gram_tiled": "weighted_gram_rows",
     "qp_pg_step_1d": "qp_pg_step",
+    "qp_pg_multi_1d": "qp_pg_multi",
 }
 
 
@@ -105,6 +106,18 @@ def audit_launch_geometry(vmem_budget: int = DEFAULT_VMEM_BUDGET
     for N in (24, 1024, 4096):
         findings += check_spec(
             qp_step.qp_launch_spec(N), f"qp_launch_spec[{N}]",
+            vmem_budget)
+    # the fused multi-iteration solve: grid (iters, n, n) with
+    # VMEM-resident duals, plus the fold variant that carries a Z panel
+    # and a zl accumulator for the folded w-update contraction.
+    for N, iters in ((24, 3), (1024, 10), (20000, 10)):
+        findings += check_spec(
+            qp_step.qp_multi_launch_spec(N, iters),
+            f"qp_multi_launch_spec[{N}x{iters}]", vmem_budget)
+    for N, iters, d in ((24, 3, 5), (1024, 10, 128), (20000, 10, 257)):
+        findings += check_spec(
+            qp_step.qp_multi_launch_spec(N, iters, d=d),
+            f"qp_multi_launch_spec[{N}x{iters} fold d={d}]",
             vmem_budget)
     return findings
 

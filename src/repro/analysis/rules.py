@@ -70,8 +70,10 @@ HOT_ROOTS = frozenset({
     "plan_step", "consensus_update", "dtsvm_step", "_fabric_step",
     "gemm_rows", "reduce", "exchange", "_per_edge_quant",
     "solve_fista", "solve_pg", "solve_pallas_fused",
+    "solve_pallas_fused_multi", "solve_factored_multi",
     "solve_box_qp_pg", "solve_box_qp_fista",
-    "weighted_gram", "weighted_gram_rows", "qp_pg_step", "_qp_rows",
+    "weighted_gram", "weighted_gram_rows", "qp_pg_step", "qp_pg_multi",
+    "_qp_rows",
 })
 
 

@@ -83,7 +83,8 @@ def names():
 
 @register("vmap")
 def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
-              qp_solver: str = "fista",
+              qp_solver: str = "fista", qp_precision: str = "f32",
+              qp_operator: str = "materialized",
               state: Optional[core.DTSVMState] = None, eval_fn=None,
               plan: Optional[engine_plan.Plan] = None, budget=None,
               **_ignored):
@@ -117,12 +118,17 @@ def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
     if plan is None:
         plan = engine_plan.compile_problem(prob, qp_iters=qp_iters,
                                            qp_solver=qp_solver,
+                                           qp_precision=qp_precision,
+                                           qp_operator=qp_operator,
                                            budget=budget)
     elif (plan.prob is not prob or plan.qp_iters != qp_iters
-          or plan.qp_solver != qp_solver):
+          or plan.qp_solver != qp_solver
+          or plan.qp_precision != qp_precision
+          or plan.qp_operator != qp_operator):
         raise ValueError(
             "prebuilt plan= disagrees with the call: pass prob=plan.prob "
-            "and matching qp_iters/qp_solver (or omit plan=)")
+            "and matching qp_iters/qp_solver/qp_precision/qp_operator "
+            "(or omit plan=)")
     return plan.run(state=state, iters=iters, eval_fn=eval_fn)
 
 
@@ -357,15 +363,30 @@ def _run_sample_shard(prob: core.DTSVMProblem, iters: int, *,
 
 
 def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",
-        qp_iters: int = 200, qp_solver: str = "fista", state=None,
-        eval_fn=None, **options):
+        qp_iters: int = 200, qp_solver: str = "fista",
+        qp_precision: str = "f32", qp_operator: str = "materialized",
+        state=None, eval_fn=None, **options):
     """Dispatch one fit through the named backend.
 
     ``backend`` is a registry name (``names()`` lists them:
     ``"vmap" | "shard_map" | "async" | "sample_shard"``); ``options``
     pass through to the backend runner (e.g. ``topology=``, ``net=``,
     ``n_shards=``, ``budget=``).  Returns ``(state, history | None)``.
+
+    The mixed-precision / factored-operator QP modes
+    (``qp_precision="bf16"`` / ``qp_operator="factored"``) are a
+    single-host plan feature: only the ``"vmap"`` backend threads them
+    (any other backend raises on a non-default value — the sharded
+    paths carry their own dual layouts).
     """
+    if (qp_precision, qp_operator) != ("f32", "materialized"):
+        if backend != "vmap":
+            raise ValueError(
+                f"qp_precision/qp_operator are vmap-backend features; "
+                f"backend={backend!r} runs the exact materialized-f32 "
+                f"dual path only")
+        options = dict(options, qp_precision=qp_precision,
+                       qp_operator=qp_operator)
     return get(backend)(prob, iters, qp_iters=qp_iters, qp_solver=qp_solver,
                         state=state, eval_fn=eval_fn, **options)
 

@@ -265,7 +265,12 @@ class OnlineSession:
         iters = iters if iters is not None else cfg.iters
         self._emit("run", iters=int(iters), record=bool(record))
         with_eval = record and self._test is not None
-        if self._jit and backend == "vmap":
+        default_qp_mode = (cfg.qp_precision, cfg.qp_operator) == (
+            "f32", "materialized")
+        # the legacy jitted fast path runs the core loop, which only
+        # knows the materialized f32 operator — non-default QP modes
+        # take the plan path below, which threads them through.
+        if self._jit and backend == "vmap" and default_qp_mode:
             Xte, yte = self._test if with_eval else (None, None)
             prob = self.problem()
             if self.state is None:
@@ -300,7 +305,8 @@ class OnlineSession:
                                                       old_active, plan))
             self.state, hist = backends.run(
                 prob, iters, backend=backend, qp_iters=cfg.qp_iters,
-                qp_solver=cfg.qp_solver, state=self.state, eval_fn=ev,
+                qp_solver=cfg.qp_solver, qp_precision=cfg.qp_precision,
+                qp_operator=cfg.qp_operator, state=self.state, eval_fn=ev,
                 **options)
             if backend == "async":
                 out = options["meter_out"]

@@ -57,8 +57,19 @@ class SolverConfig:
     qp_iters : int
         Inner box-QP iterations per ADMM step.
     qp_solver : str
-        Dual QP engine: ``"fista" | "pg" | "pallas_fused"``
-        (``repro.engine.qp_engines``).
+        Dual QP engine: ``"fista" | "pg" | "pallas_fused" |
+        "pallas_fused_multi"`` (``repro.engine.qp_engines``).
+    qp_precision : str
+        ``"f32"`` (default, exact) or ``"bf16"`` — mixed-precision K
+        tiles with f32 iterates/accumulators in the fused multi
+        engine.  Requires ``qp_solver="pallas_fused_multi"``;
+        validated by the BENCH_fit risk-delta table, never claimed
+        bitwise.
+    qp_operator : str
+        ``"materialized"`` (default) or ``"factored"`` — evaluate the
+        QP matvec as ``Z (a (Z^T lam))`` in O(N D) without ever
+        building K (the large-n fast path; K is rank <= p+1).
+        Requires ``qp_solver="pallas_fused_multi"`` and f32.
     box_scale : float, optional
         The paper's multiplier on ``C`` in the QP box (auto: ``V*T``).
     backend : str
@@ -84,6 +95,9 @@ class SolverConfig:
     iters: int = 60                  # ADMM iterations per fit()
     qp_iters: int = 200              # inner box-QP iterations
     qp_solver: str = "fista"         # "fista" | "pg" | "pallas_fused"
+    #                                  | "pallas_fused_multi"
+    qp_precision: str = "f32"        # "f32" | "bf16" (multi engine only)
+    qp_operator: str = "materialized"   # "materialized" | "factored"
     box_scale: Optional[float] = None   # paper's V*T multiplier (auto)
     backend: str = "vmap"            # "vmap" | "shard_map" | "async"
     backend_options: Dict[str, Any] = field(default_factory=dict)
@@ -118,6 +132,8 @@ class SolverConfig:
             "eps2": float(self.eps2), "eta1": float(self.eta1),
             "eta2": float(self.eta2), "iters": int(self.iters),
             "qp_iters": int(self.qp_iters), "qp_solver": self.qp_solver,
+            "qp_precision": self.qp_precision,
+            "qp_operator": self.qp_operator,
             "box_scale": None if self.box_scale is None
             else float(self.box_scale),
             "backend": self.backend,
@@ -241,7 +257,8 @@ class _ConsensusSolver:
         self.state_, self.history_ = backends.run(
             prob, iters if iters is not None else cfg.iters,
             backend=backend, qp_iters=cfg.qp_iters,
-            qp_solver=cfg.qp_solver, state=state,
+            qp_solver=cfg.qp_solver, qp_precision=cfg.qp_precision,
+            qp_operator=cfg.qp_operator, state=state,
             eval_fn=eval_fn, **options)
         self.net_report_ = options.get("meter_out", {}).get("report")
         self.problem_ = prob

@@ -94,7 +94,10 @@ class PlanInvariants(NamedTuple):
     u: jnp.ndarray        # (V, T, 2p+2)
     a: jnp.ndarray        # (V, T, p+1)
     Z: jnp.ndarray        # (V, T, N, p+1)
-    K: jnp.ndarray        # (V, T, N, N)
+    K: Optional[jnp.ndarray]   # (V, T, N, N); None under the factored
+    #                            operator (K is rank <= p+1 and the QP
+    #                            matvec evaluates as Z (a (Z^T lam)) —
+    #                            see engine.qp_engines.solve_factored_multi)
     hi: jnp.ndarray       # (V, T, N)
     L: jnp.ndarray        # (V, T)
 
@@ -169,6 +172,67 @@ def _streamed_gram_jit(Zm, a, Zn, *, chunk, tile, _pallas):
     return K.reshape(batch + (M, N)), rs.reshape(batch + (M,))
 
 
+@functools.partial(jax.jit, static_argnames=("chunk", "tile", "_pallas"))
+def _streamed_rowsums_jit(Z, a, *, chunk, tile, _pallas):
+    """Per-row |K| sums (the Gershgorin ingredients) computed chunk by
+    chunk with the K panels DISCARDED — the factored operator's L pass.
+    Each chunk runs the identical ``weighted_gram_rows`` + |.|-rowsum
+    compute as ``_streamed_gram_jit``, so the resulting ``L`` is
+    bitwise the streamed materialized build's at the same chunk."""
+    batch = Z.shape[:-2]
+    N, D = Z.shape[-2:]
+    Zf = Z.reshape((-1, N, D))
+    af = a.reshape((-1, D))
+    B = Zf.shape[0]
+    chunk = min(chunk, N)
+    nc = -(-N // chunk)
+    rs0 = jnp.zeros((B, N), jnp.float32)
+
+    def body(i, rs):
+        b = i // nc
+        start = jnp.minimum((i % nc) * chunk, N - chunk)
+        zn = jax.lax.dynamic_slice(Zf, (b, 0, 0), (1, N, D))[0]
+        ab = jax.lax.dynamic_slice(af, (b, 0), (1, D))[0]
+        zrows = jax.lax.dynamic_slice(zn, (start, 0), (chunk, D))
+        Kc = kops.weighted_gram_rows(zrows, ab, zn, tile=tile)
+        rc = jnp.sum(jnp.abs(Kc), axis=-1)
+        return jax.lax.dynamic_update_slice(rs, rc[None], (b, start))
+
+    rs = jax.lax.fori_loop(0, B * nc, body, rs0)
+    return rs.reshape(batch + (N,))
+
+
+#: default row chunk of the K-less Lipschitz pass when no budget binds:
+#: the transient panel is chunk*N elements — small against the O(N D)
+#: factored working set, large enough to keep the per-chunk GEMM fat.
+DEFAULT_LIPSCHITZ_CHUNK = 512
+
+
+def streamed_lipschitz(Z: jnp.ndarray, a: jnp.ndarray,
+                       budget: Optional[PlanBudget] = None) -> jnp.ndarray:
+    """The Gershgorin bound L = max_i sum_j |K_ij| WITHOUT keeping K:
+    row panels are computed, |.|-row-summed and discarded.  This is the
+    factored operator's invariant build — its only K-sized quantity,
+    streamed.  ``budget`` reuses the same ``row_chunk`` policy as the
+    materialized streamed build (so factored and budgeted-materialized
+    fits derive bitwise-identical L); without one the chunk defaults to
+    :data:`DEFAULT_LIPSCHITZ_CHUNK`."""
+    extra = (a.ndim - 1) - (Z.ndim - 2)
+    if extra > 0:
+        Z = jnp.broadcast_to(Z, a.shape[:-1] + Z.shape[-2:])
+    batch = Z.shape[:-2]
+    B = int(np.prod(batch, dtype=np.int64)) if batch else 1
+    N = Z.shape[-2]
+    chunk = budget.row_chunk(B, N) if budget is not None else None
+    if chunk is None:
+        chunk = min(DEFAULT_LIPSCHITZ_CHUNK, N)
+    tile = None if budget is None else budget.tile
+    rs = _streamed_rowsums_jit(Z, a, chunk=int(chunk),
+                               tile=None if tile is None else tuple(tile),
+                               _pallas=kops._use_pallas())
+    return jnp.maximum(jnp.max(rs, axis=-1), 1e-12)
+
+
 def gram_and_lipschitz(Z: jnp.ndarray, a: jnp.ndarray,
                        budget: Optional[PlanBudget] = None
                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -213,7 +277,8 @@ def compute_z(prob: core.DTSVMProblem) -> jnp.ndarray:
 def compute_invariants(prob: core.DTSVMProblem, *,
                        nbr_counts: Optional[jnp.ndarray] = None,
                        Z: Optional[jnp.ndarray] = None,
-                       budget: Optional[PlanBudget] = None
+                       budget: Optional[PlanBudget] = None,
+                       materialize_k: bool = True
                        ) -> PlanInvariants:
     """All loop-invariants of Prop. 1, from scratch.  Pure jnp.
 
@@ -221,11 +286,18 @@ def compute_invariants(prob: core.DTSVMProblem, *,
     compiler shares one Z across its whole config axis).  ``budget``
     streams the K build through bounded row panels (bitwise identical
     to the dense build — see ``gram_and_lipschitz``).
+    ``materialize_k=False`` is the factored-operator build: K stays
+    ``None`` and only the Gershgorin bound is computed, through
+    discarded row panels (``streamed_lipschitz``) — the whole invariant
+    set is O(N D) instead of O(N^2).
     """
     ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
     if Z is None:
         Z = compute_z(prob)
-    K, L = gram_and_lipschitz(Z, a, budget)
+    if materialize_k:
+        K, L = gram_and_lipschitz(Z, a, budget)
+    else:
+        K, L = None, streamed_lipschitz(Z, a, budget)
     return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi, L=L)
 
 
@@ -255,6 +327,14 @@ def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,
     n = int(changed.sum())
     if n == 0:
         K, L = inv.K, inv.L
+    elif inv.K is None:                  # factored plan: L-only rebuild
+        K = None
+        if n == changed.size:
+            L = streamed_lipschitz(inv.Z, a, budget)
+        else:
+            iv, it = np.nonzero(changed)
+            L = inv.L.at[iv, it].set(
+                streamed_lipschitz(inv.Z[iv, it], a[iv, it], budget))
     elif n == changed.size:
         K, L = gram_and_lipschitz(inv.Z, a, budget)
     else:

@@ -71,11 +71,21 @@ def consensus_update(prob: core.DTSVMProblem, state: core.DTSVMState,
 def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
               state: core.DTSVMState, *, qp_iters: int = 200,
               qp_solver: str = DEFAULT_QP_SOLVER,
+              qp_precision: str = "f32",
+              qp_operator: str = "materialized",
               nbr_reduce: Optional[Callable] = None) -> core.DTSVMState:
     """One Prop.-1 iteration (eqs. 6-9) on precomputed invariants.
 
     Pure and traceable — the SPMD backend calls this inside shard_map
     with a collective ``nbr_reduce`` and per-node invariant shards.
+
+    ``qp_precision`` / ``qp_operator`` select the mixed-precision and
+    factored-matvec QP modes (validated by ``compile_problem``; both
+    default to the exact materialized-f32 path).  An engine with the
+    ``supports_fold`` capability receives ``Z`` and returns the zl
+    contraction from the same fused launch — on the oracle path that
+    fold is the identical einsum, so the default-path bitwise contract
+    is untouched.
     """
     p = prob.X.shape[-1]
     if nbr_reduce is None:
@@ -88,11 +98,19 @@ def plan_step(prob: core.DTSVMProblem, inv: inv_lib.PlanInvariants,
     # config axis — the sweep engine relies on batched == serial exactly
     q = prob.mask + jnp.sum(Z * g[..., None, :], axis=-1)
 
-    lam = qp_engines.get(qp_solver)(inv.K, q, inv.hi, state.lam,
-                                    iters=qp_iters, L=inv.L)   # eq. (6)
-
-    # repro: noqa[raw-einsum-in-plan] — deliberate: mul+reduce would materialize a (V,T,N,D) temporary; batching stability is pinned by the fig2-fig7 golden fixtures across all backends
-    zl = jnp.einsum("vtn,vtnd->vtd", lam, Z)                   # X^T Y lam
+    engine = qp_engines.get(qp_solver)
+    if qp_operator == "factored":
+        lam, zl = qp_engines.solve_factored_multi(
+            Z, inv.a, q, inv.hi, state.lam, iters=qp_iters,
+            L=inv.L)                                           # eq. (6)
+    elif getattr(engine, "supports_fold", False):
+        lam, zl = engine(inv.K, q, inv.hi, state.lam, iters=qp_iters,
+                         L=inv.L, precision=qp_precision, Z=Z)  # eq. (6)
+    else:
+        lam = engine(inv.K, q, inv.hi, state.lam,
+                     iters=qp_iters, L=inv.L)                  # eq. (6)
+        # repro: noqa[raw-einsum-in-plan] — deliberate: mul+reduce would materialize a (V,T,N,D) temporary; batching stability is pinned by the fig2-fig7 golden fixtures across all backends
+        zl = jnp.einsum("vtn,vtnd->vtd", lam, Z)               # X^T Y lam
     r_new, alpha, beta = consensus_update(prob, state, u, ntp, nbr, f, zl,
                                           nbr_reduce)
     return core.DTSVMState(r=r_new, alpha=alpha, beta=beta, lam=lam)
@@ -110,6 +128,8 @@ class Plan:
     def __init__(self, prob: core.DTSVMProblem,
                  inv: inv_lib.PlanInvariants, *, qp_iters: int = 200,
                  qp_solver: str = DEFAULT_QP_SOLVER,
+                 qp_precision: str = "f32",
+                 qp_operator: str = "materialized",
                  nbr_reduce: Optional[Callable] = None,
                  budget: Optional[inv_lib.PlanBudget] = None,
                  stats: Optional[dict] = None):
@@ -117,6 +137,8 @@ class Plan:
         self.inv = inv
         self.qp_iters = qp_iters
         self.qp_solver = qp_solver
+        self.qp_precision = qp_precision
+        self.qp_operator = qp_operator
         self.budget = budget
         self._nbr_reduce = nbr_reduce
         V, T = prob.X.shape[:2]
@@ -134,6 +156,8 @@ class Plan:
         """One ADMM iteration on the precomputed invariants."""
         return plan_step(self.prob, self.inv, state, qp_iters=self.qp_iters,
                          qp_solver=self.qp_solver,
+                         qp_precision=self.qp_precision,
+                         qp_operator=self.qp_operator,
                          nbr_reduce=self._nbr_reduce)
 
     def run(self, state: Optional[core.DTSVMState] = None, iters: int = 1,
@@ -166,7 +190,8 @@ class Plan:
             arr = np.asarray(leaf)
             h.update(f"{arr.dtype}|{arr.shape}|".encode())
             h.update(arr.tobytes())
-        h.update(f"|{self.qp_iters}|{self.qp_solver}".encode())
+        h.update(f"|{self.qp_iters}|{self.qp_solver}"
+                 f"|{self.qp_precision}|{self.qp_operator}".encode())
         return h.hexdigest()
 
     # -- incremental re-planning (the online Session path) -----------------
@@ -185,13 +210,18 @@ class Plan:
         stats["gram_slices_computed"] += n
         stats["gram_slices_reused"] += V * T - n
         return Plan(prob, inv, qp_iters=self.qp_iters,
-                    qp_solver=self.qp_solver, nbr_reduce=self._nbr_reduce,
+                    qp_solver=self.qp_solver,
+                    qp_precision=self.qp_precision,
+                    qp_operator=self.qp_operator,
+                    nbr_reduce=self._nbr_reduce,
                     budget=self.budget, stats=stats)
 
 
 def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
                     qp_iters: Optional[int] = None,
                     qp_solver: Optional[str] = None,
+                    qp_precision: Optional[str] = None,
+                    qp_operator: Optional[str] = None,
                     nbr_reduce: Optional[Callable] = None,
                     nbr_counts=None,
                     budget: Optional[inv_lib.PlanBudget] = None) -> Plan:
@@ -208,7 +238,19 @@ def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
     qp_iters : int, optional
         Inner box-QP iterations per ADMM step (default 200).
     qp_solver : str, optional
-        QP engine name (``"fista" | "pg" | "pallas_fused"``).
+        QP engine name (``"fista" | "pg" | "pallas_fused" |
+        "pallas_fused_multi"``).
+    qp_precision : str, optional
+        ``"f32"`` (default, exact) or ``"bf16"`` — mixed-precision K
+        tiles with f32 iterates; requires an engine with the
+        ``supports_precision`` capability (``"pallas_fused_multi"``).
+        Validated by risk deltas (BENCH_fit), never claimed bitwise.
+    qp_operator : str, optional
+        ``"materialized"`` (default) or ``"factored"`` — the low-rank
+        O(N D) matvec ``Z (a (Z^T lam))``; K is never built (the
+        invariants carry ``K=None`` and the Gershgorin bound streams
+        through discarded row panels).  Requires
+        ``qp_solver="pallas_fused_multi"`` and f32.
     nbr_reduce : callable, optional
         Neighbor-sum hook for SPMD execution.
     nbr_counts : jnp.ndarray, optional
@@ -230,10 +272,37 @@ def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
         qp_iters = getattr(cfg, "qp_iters", 200)
     if qp_solver is None:
         qp_solver = getattr(cfg, "qp_solver", DEFAULT_QP_SOLVER)
+    if qp_precision is None:
+        qp_precision = getattr(cfg, "qp_precision", "f32")
+    if qp_operator is None:
+        qp_operator = getattr(cfg, "qp_operator", "materialized")
     if budget is None:
         budget = getattr(cfg, "budget", None)
-    qp_engines.get(qp_solver)        # fail fast on unknown engines
-    inv = inv_lib.compute_invariants(prob, nbr_counts=nbr_counts,
-                                     budget=budget)
+    engine = qp_engines.get(qp_solver)   # fail fast on unknown engines
+    if qp_precision not in ("f32", "bf16"):
+        raise ValueError(f"unknown qp_precision {qp_precision!r}; "
+                         f"expected 'f32' or 'bf16'")
+    if qp_operator not in ("materialized", "factored"):
+        raise ValueError(f"unknown qp_operator {qp_operator!r}; "
+                         f"expected 'materialized' or 'factored'")
+    if qp_precision != "f32" and not getattr(engine, "supports_precision",
+                                             False):
+        raise ValueError(
+            f"qp_precision={qp_precision!r} needs a mixed-precision "
+            f"engine (qp_solver='pallas_fused_multi'); got {qp_solver!r}")
+    if qp_operator == "factored":
+        if not getattr(engine, "supports_fold", False):
+            raise ValueError(
+                f"qp_operator='factored' is validated only with the "
+                f"fused multi engine (qp_solver='pallas_fused_multi'); "
+                f"got {qp_solver!r}")
+        if qp_precision != "f32":
+            raise ValueError("qp_operator='factored' is f32-only "
+                             "(the low-rank matvec never streams K "
+                             "tiles, so bf16 K has nothing to apply to)")
+    inv = inv_lib.compute_invariants(
+        prob, nbr_counts=nbr_counts, budget=budget,
+        materialize_k=(qp_operator != "factored"))
     return Plan(prob, inv, qp_iters=qp_iters, qp_solver=qp_solver,
+                qp_precision=qp_precision, qp_operator=qp_operator,
                 nbr_reduce=nbr_reduce, budget=budget)

@@ -21,6 +21,25 @@ Built-ins:
                      ``kernels.ops.qp_pg_step`` — compiled on TPU,
                      interpret-mode under ``REPRO_USE_PALLAS=1`` on CPU,
                      jnp oracle otherwise.  Same fixed point as ``"pg"``.
+- ``"pallas_fused_multi"`` the fused MULTI-iteration solve
+                     (``kernels.ops.qp_pg_multi``): all ``iters``
+                     projected-gradient iterations in one launch with
+                     the duals VMEM-resident, K streamed tile-by-tile
+                     per iteration.  Accepts ``precision="bf16"``
+                     (mixed mode: bf16 K tiles, f32 iterates) and an
+                     optional ``Z`` operand that folds the w-update
+                     contraction ``zl = Z^T lam`` into the same pass
+                     (the return becomes ``(lam, zl)``).  In f32 its
+                     oracle path is clip + fori of the single step —
+                     bitwise identical to ``"pallas_fused"``.
+
+``solve_factored_multi`` (module-level, not registered — it consumes
+``(Z, a)`` instead of ``K``) is the low-rank companion: the same PG
+iteration with the matvec evaluated as ``Z (a * (Z^T lam))`` in
+O(N D) per step, K never materialized.  Selected via
+``SolverConfig(qp_operator="factored")``; validated against the
+materialized path by risk deltas, not bitwise (the contraction order
+differs by construction).
 
 Register new engines with ``@qp_engines.register("name")``; select per
 fit via ``SolverConfig(qp_solver="name")``.
@@ -105,3 +124,61 @@ def solve_pallas_fused(K, q, hi, lam0=None, *, iters: int,
         return kops.qp_pg_step(lam, K, q, hi, gamma)
 
     return jax.lax.fori_loop(0, iters, body, lam)
+
+
+@register("pallas_fused_multi")
+def solve_pallas_fused_multi(K, q, hi, lam0=None, *, iters: int,
+                             L: Optional[jnp.ndarray] = None,
+                             precision: str = "f32", Z=None):
+    """The fused multi-iteration solve: ONE launch runs every PG
+    iteration with the duals VMEM-resident and K streamed tile-by-tile
+    per iteration (``kernels.ops.qp_pg_multi``) — one HBM round trip
+    per solve instead of per step.
+
+    ``precision="bf16"`` streams bf16 K tiles against f32 iterates and
+    accumulators.  With ``Z`` (..., N, D) the w-update contraction
+    ``zl = Z^T lam`` of the final iterate folds into the same pass and
+    the return becomes ``(lam, zl)``.  The f32 oracle path is clip +
+    fori of ``ref.qp_pg_step`` — bitwise identical to
+    :func:`solve_pallas_fused` by construction."""
+    lam0, L = _prep(K, q, hi, lam0, L)
+    gamma = 1.0 / L
+    return kops.qp_pg_multi(lam0, K, q, hi, gamma, iters=iters, Z=Z,
+                            precision=precision)
+
+
+#: capability flags ``plan_step`` dispatches on: the engine understands
+#: ``precision=`` and can fold the zl contraction via ``Z=``.
+solve_pallas_fused_multi.supports_precision = True
+solve_pallas_fused_multi.supports_fold = True
+
+
+def solve_factored_multi(Z, a, q, hi, lam0=None, *, iters: int, L):
+    """The low-rank PG solve: K = Z diag(a) Z^T is rank <= D << N, so
+    each matvec evaluates as ``Z (a * (Z^T lam))`` in O(N D) — K is
+    never materialized (``compile_problem`` skips the Gram build
+    entirely under ``qp_operator="factored"``; ``L`` is mandatory
+    because there is no K to derive it from — the invariant build
+    streams |K| row sums without keeping the panels).
+
+    Returns ``(lam, zl)`` — the final-iterate w-update contraction
+    falls out of the last factored matvec's inner product for free.
+    NOT bitwise with the materialized path (the contraction reorders
+    the reduction by construction); validated by the BENCH_fit risk
+    deltas like the bf16 wire formats."""
+    if lam0 is None:
+        lam0 = jnp.zeros_like(q)
+    gamma = (1.0 / L)[..., None]                     # (..., 1) per problem
+    lam = jnp.clip(lam0, 0.0, hi)
+
+    def body(_, lam):
+        # repro: noqa[raw-einsum-in-plan] — deliberate: the factored operator's defining contraction; the mode is opt-in and validated by risk deltas, never claimed bitwise vs the materialized plan
+        zt = jnp.einsum("...n,...nd->...d", lam, Z)
+        # repro: noqa[raw-einsum-in-plan] — deliberate: second half of the O(ND) factored matvec (see above)
+        Klam = jnp.einsum("...nd,...d->...n", Z, a * zt)
+        return jnp.clip(lam + gamma * (q - Klam), 0.0, hi)
+
+    lam = jax.lax.fori_loop(0, iters, body, lam)
+    # repro: noqa[raw-einsum-in-plan] — deliberate: same formula as plan_step's zl einsum (the factored fold reuses the final Z^T lam)
+    zl = jnp.einsum("...n,...nd->...d", lam, Z)
+    return lam, zl

@@ -386,6 +386,15 @@ def compile_sweep(prob: core.DTSVMProblem, cfgs: Sequence, *,
     """
     qp_iters, qp_solver = _check_static(cfgs, qp_iters, qp_solver)
     qp_engines.get(qp_solver)            # fail fast on unknown engines
+    for key, default in (("qp_precision", "f32"),
+                         ("qp_operator", "materialized")):
+        bad = {getattr(c, key) for c in cfgs
+               if getattr(c, key, default) != default}
+        if bad:
+            raise ValueError(
+                f"compile_sweep shares one stacked materialized-K build; "
+                f"{key}={sorted(bad)} is per-fit only — use "
+                f"compile_problem/SolverConfig for non-default QP modes")
     probs = per_config_problems(prob, cfgs)
     Z = inv_lib.compute_z(prob)
 

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.launch import LANE, SUBLANE, LaunchSpec, next_multiple
+from repro.kernels.launch import (LANE, SUBLANE, LaunchSpec,
+                                  default_interpret, next_multiple)
 
 DEFAULT_BLOCK = 256
 DEFAULT_TILE = (256, 256)
@@ -75,8 +76,13 @@ def _gram_kernel(zi_ref, zj_ref, a_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("block", "interpret"))
 def weighted_gram_2d(Z: jnp.ndarray, a: jnp.ndarray, *,
                      block: int = DEFAULT_BLOCK,
-                     interpret: bool = True) -> jnp.ndarray:
-    """K = Z diag(a) Z^T for a single problem.  Z: (N, D), a: (D,)."""
+                     interpret=None) -> jnp.ndarray:
+    """K = Z diag(a) Z^T for a single problem.  Z: (N, D), a: (D,).
+
+    ``interpret`` defaults to platform-derived (compiled on TPU,
+    interpret elsewhere)."""
+    if interpret is None:
+        interpret = default_interpret()
     N, D = Z.shape
     bn = min(block, max(_next_multiple(N, SUBLANE), SUBLANE))
     spec = gram_launch_spec(N, N, D, bn, bn)
@@ -115,7 +121,7 @@ def align_tile(tile, m: int, n: int):
 def weighted_gram_tiled(Zm: jnp.ndarray, a: jnp.ndarray,
                         Zn: jnp.ndarray, *,
                         tile=DEFAULT_TILE,
-                        interpret: bool = True) -> jnp.ndarray:
+                        interpret=None) -> jnp.ndarray:
     """Rectangular weighted Gram block K = Zm diag(a) Zn^T, tiled.
 
     Zm: (M, D) row panel, Zn: (N, D) column panel, a: (D,) ->  (M, N),

@@ -45,3 +45,14 @@ class LaunchSpec(NamedTuple):
 def next_multiple(x: int, m: int) -> int:
     """Smallest multiple of ``m`` that is >= ``x``."""
     return -(-x // m) * m
+
+
+def default_interpret() -> bool:
+    """Platform-derived default for the kernels' ``interpret`` kwarg:
+    compiled on TPU, interpret mode everywhere else.  Resolved at trace
+    time (it is a static jit argument), so a kernel called with
+    ``interpret=None`` never silently runs the Python interpreter on a
+    TPU — the bug the old hard-coded ``interpret=True`` defaults had."""
+    import jax  # local: keep this module importable as pure geometry data
+
+    return jax.default_backend() != "tpu"

@@ -110,9 +110,7 @@ def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:
     fn = lambda l1, K2, q1, h1, g0: qp_kernel.qp_pg_step_1d(
         l1, K2, q1, h1, g0, interpret=_interpret())
     batch = lam.shape[:-1]
-    gamma = jnp.asarray(gamma, jnp.float32)
-    if gamma.ndim and gamma.ndim < len(batch):      # leading-align
-        gamma = gamma.reshape(gamma.shape + (1,) * (len(batch) - gamma.ndim))
+    gamma = _align_gamma(gamma, batch)
     if batch:
         flat = lambda x, nd: x.reshape((-1,) + x.shape[len(batch):])
         gamma_b = flat(jnp.broadcast_to(gamma, batch), 0)
@@ -121,3 +119,58 @@ def qp_pg_step(lam, K, q, hi, gamma) -> jnp.ndarray:
             (flat(lam, 1), flat(K, 2), flat(q, 1), flat(hi, 1), gamma_b))
         return out.reshape(batch + out.shape[-1:])
     return fn(lam, K, q, hi, gamma)
+
+
+def _align_gamma(gamma, batch):
+    """Normalize a step-size array for the 1-d kernels: leading-align a
+    per-problem gamma against ``batch``, and in the UNBATCHED case
+    squeeze a size-1 array (e.g. shape ``(1,)``) to 0-d — the 1-d
+    kernels expect a scalar for their (1, 1) block, and a non-scalar
+    gamma used to slip through when ``batch`` was empty."""
+    gamma = jnp.asarray(gamma, jnp.float32)
+    if not batch:
+        return gamma.reshape(())            # raises if gamma.size != 1
+    if gamma.ndim and gamma.ndim < len(batch):      # leading-align
+        gamma = gamma.reshape(gamma.shape + (1,) * (len(batch) - gamma.ndim))
+    return gamma
+
+
+def qp_pg_multi(lam0, K, q, hi, gamma, *, iters: int, Z=None,
+                precision: str = "f32"):
+    """The fused multi-iteration PG solve over arbitrary leading batch
+    dims: clip the warm start into the box, run ``iters`` fused
+    matvec+step+projection iterations with the duals resident (VMEM on
+    the kernel path), optionally folding the w-update contraction
+    ``zl = Z^T lam`` of the final iterate into the same pass.
+
+    Returns ``lam`` — or ``(lam, zl)`` when ``Z`` (..., N, D) is given.
+    ``precision="bf16"`` selects the mixed mode (bf16 K tiles, f32
+    iterates/accumulators) on both the kernel and the oracle path.  On
+    a given dispatch path f32 is bitwise identical to iterating
+    :func:`qp_pg_step` from a clipped warm start — exactly, by
+    construction, on the oracle path; the interpret/compiled kernel is
+    a separately compiled program and matches the iterated kernel to
+    compiler-contraction (FMA) tolerance.  ``gamma`` follows the same
+    leading-aligned convention as :func:`qp_pg_step`."""
+    if not _use_pallas():
+        return ref.qp_pg_multi(lam0, K, q, hi, gamma, iters=iters, Z=Z,
+                               precision=precision)
+    fn = lambda l0, K2, q1, h1, g0, z2: qp_kernel.qp_pg_multi_1d(
+        l0, K2, q1, h1, g0, iters=iters, Z=z2, precision=precision,
+        interpret=_interpret())
+    batch = lam0.shape[:-1]
+    gamma = _align_gamma(gamma, batch)
+    if not batch:
+        return fn(lam0, K, q, hi, gamma, Z)
+    flat = lambda x: x.reshape((-1,) + x.shape[len(batch):])
+    gamma_b = flat(jnp.broadcast_to(gamma, batch))
+    if Z is None:
+        out = jax.lax.map(
+            lambda args: fn(*args, None),
+            (flat(lam0), flat(K), flat(q), flat(hi), gamma_b))
+        return out.reshape(batch + out.shape[-1:])
+    lam_f, zl_f = jax.lax.map(
+        lambda args: fn(*args),
+        (flat(lam0), flat(K), flat(q), flat(hi), gamma_b, flat(Z)))
+    return (lam_f.reshape(batch + lam_f.shape[-1:]),
+            zl_f.reshape(batch + zl_f.shape[-1:]))

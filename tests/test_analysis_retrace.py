@@ -117,3 +117,30 @@ def test_serve_server_batches_share_bucket_compiles():
         assert jit_cache_size(gemm_rows) == base
     finally:
         srv.close()
+
+
+def test_multi_engine_fit_traces_once():
+    """The fused multi-iteration engine keeps the compile-once contract:
+    one Gram build, one plan_step trace for the whole fit."""
+    X, y, mask, adj = _data()
+    with trace_counter("repro.kernels.ops:weighted_gram",
+                       "repro.engine.plan:plan_step") as c:
+        api.DTSVM(iters=3, qp_iters=2,
+                  qp_solver="pallas_fused_multi").fit(X, y, mask, adj)
+    assert c["weighted_gram"] == 1
+    assert c["plan_step"] == 1
+
+
+def test_factored_fit_never_builds_gram():
+    """qp_operator="factored" must NEVER enter the dense Gram build —
+    the streamed Lipschitz pass enters the row-panel kernel exactly
+    once and K stays unmaterialized."""
+    X, y, mask, adj = _data()
+    with trace_counter("repro.kernels.ops:weighted_gram",
+                       "repro.kernels.ops:weighted_gram_rows",
+                       "repro.engine.plan:plan_step") as c:
+        api.DTSVM(iters=3, qp_iters=2, qp_solver="pallas_fused_multi",
+                  qp_operator="factored").fit(X, y, mask, adj)
+    assert c["weighted_gram"] == 0
+    assert c["weighted_gram_rows"] == 1
+    assert c["plan_step"] == 1

@@ -402,3 +402,195 @@ def test_qp_pg_step_batched_gamma(monkeypatch):
     monkeypatch.setenv("REPRO_USE_PALLAS", "1")
     got_pallas = np.asarray(kops.qp_pg_step(lam, K, q, hi, gamma))
     np.testing.assert_allclose(got_pallas, want, rtol=3e-5, atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused multi-iteration engine + QP operating modes (precision/operator)
+# ---------------------------------------------------------------------------
+def test_multi_engine_registered_with_capabilities():
+    assert "pallas_fused_multi" in qp_engines.names()
+    eng = qp_engines.get("pallas_fused_multi")
+    assert getattr(eng, "supports_precision", False)
+    assert getattr(eng, "supports_fold", False)
+    # the legacy engines advertise neither capability
+    for name in ("fista", "pg", "pallas_fused"):
+        legacy = qp_engines.get(name)
+        assert not getattr(legacy, "supports_precision", False)
+        assert not getattr(legacy, "supports_fold", False)
+
+
+def test_multi_engine_bitwise_vs_iterated_on_oracle_path(monkeypatch):
+    """The per-dispatch-path bitwise contract: on the jnp-oracle path
+    the multi engine IS clip + fori of the single fused step, so its
+    f32 answer equals iterating "pallas_fused" bit for bit — including
+    from out-of-box random warm starts (the satellite-1 bug class)."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    rng = np.random.default_rng(8)
+    for seed in range(6):
+        r = np.random.default_rng(seed)
+        K, q, hi = _rand_box_qp(r, 16, batch=(2,))
+        lam0 = jnp.asarray(
+            r.uniform(-1.0, 2.0, size=(2, 16)).astype(np.float32)) * hi
+        a = qp_engines.get("pallas_fused")(K, q, hi, lam0, iters=9)
+        b = qp_engines.get("pallas_fused_multi")(K, q, hi, lam0, iters=9)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # pg iterates the identical update through a different program
+        # shape (vmap of fori vs fori of batched step): allclose only
+        c = qp_engines.get("pg")(K, q, hi, lam0, iters=9)
+        np.testing.assert_allclose(np.asarray(c), np.asarray(b),
+                                   rtol=3e-5, atol=3e-5)
+    del rng
+
+
+def test_multi_engine_interpret_mode_matches_oracle(monkeypatch):
+    """REPRO_USE_PALLAS=1 routes the multi engine through the fused
+    interpret-mode kernel (one launch per solve)."""
+    rng = np.random.default_rng(9)
+    K, q, hi = _rand_box_qp(rng, 20, batch=(2,))
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    oracle = qp_engines.get("pallas_fused_multi")(K, q, hi, iters=15)
+    monkeypatch.setenv("REPRO_USE_PALLAS", "1")
+    fused = qp_engines.get("pallas_fused_multi")(K, q, hi, iters=15)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(oracle),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_multi_engine_converges_to_qp_optimum():
+    rng = np.random.default_rng(10)
+    K, q, hi = _rand_box_qp(rng, 24)
+    lam = qp_engines.get("pallas_fused_multi")(K, q, hi, iters=3000)
+    want = brute_force_box_qp(np.asarray(K), np.asarray(q), np.asarray(hi))
+    np.testing.assert_allclose(np.asarray(lam), want, atol=5e-4)
+
+
+def test_multi_fit_bitwise_vs_pallas_fused_fit(monkeypatch):
+    """SolverConfig(qp_solver="pallas_fused_multi") must land on the
+    IDENTICAL state as "pallas_fused": inside one jitted plan the f32
+    oracle bodies trace to the same jaxpr (clip + fori of the fused
+    step + the same zl contraction), so the whole fit is bitwise.
+    Pinned to the oracle dispatch path — bitwise is a per-path
+    contract; the interpret/compiled kernels are separate programs and
+    match to compiler-contraction tolerance only."""
+    monkeypatch.setenv("REPRO_USE_PALLAS", "0")
+    data, A = _make(V=4, T=2, n=8, seed=2)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A, C=0.01)
+    st_a, _ = engine.compile_problem(
+        prob, qp_iters=30, qp_solver="pallas_fused").run(iters=8)
+    st_b, _ = engine.compile_problem(
+        prob, qp_iters=30, qp_solver="pallas_fused_multi").run(iters=8)
+    _assert_states_equal(st_a, st_b)
+
+
+def test_compile_problem_validates_qp_modes():
+    data, A = _make(V=3, T=1)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A)
+    with pytest.raises(ValueError, match="qp_precision"):
+        engine.compile_problem(prob, qp_precision="f16")
+    with pytest.raises(ValueError, match="qp_operator"):
+        engine.compile_problem(prob, qp_operator="sparse")
+    # bf16 needs a precision-capable engine; factored needs fold + f32
+    with pytest.raises(ValueError, match="precision"):
+        engine.compile_problem(prob, qp_solver="fista",
+                               qp_precision="bf16")
+    with pytest.raises(ValueError, match="factored"):
+        engine.compile_problem(prob, qp_solver="fista",
+                               qp_operator="factored")
+    with pytest.raises(ValueError, match="factored"):
+        engine.compile_problem(prob, qp_solver="pallas_fused_multi",
+                               qp_precision="bf16", qp_operator="factored")
+
+
+def test_backends_run_gates_qp_modes_to_vmap():
+    data, A = _make(V=3, T=1)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A)
+    from repro.api import backends
+    with pytest.raises(ValueError, match="vmap"):
+        backends.run(prob, 2, backend="shard_map",
+                     qp_solver="pallas_fused_multi", qp_precision="bf16")
+
+
+def test_factored_operator_skips_gram_and_matches_risks():
+    """qp_operator="factored" never materializes K (inv.K is None), the
+    streamed Lipschitz bound equals the dense Gershgorin bound bit for
+    bit (row panels are bitwise rows of K), and the classifier lands
+    within float tolerance of the materialized path."""
+    data, A = _make(V=4, T=2, n=10, seed=4, n_test=150)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A, C=0.01)
+    plan_m = engine.compile_problem(prob, qp_iters=60,
+                                    qp_solver="pallas_fused_multi")
+    plan_f = engine.compile_problem(prob, qp_iters=60,
+                                    qp_solver="pallas_fused_multi",
+                                    qp_operator="factored")
+    assert plan_f.inv.K is None and plan_m.inv.K is not None
+    np.testing.assert_array_equal(np.asarray(plan_f.inv.L),
+                                  np.asarray(plan_m.inv.L))
+    st_m, _ = plan_m.run(iters=12)
+    st_f, _ = plan_f.run(iters=12)
+    np.testing.assert_allclose(np.asarray(st_f.r), np.asarray(st_m.r),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_factored_fit_end_to_end_matches_fista_risks():
+    data, A = _make(V=6, T=2, n=12, seed=1, n_test=200)
+    base = SolverConfig(C=0.01, iters=25, qp_iters=300)
+    r_fista = DTSVM(base).fit(
+        data["X"], data["y"], mask=data["mask"], adj=A).risks(
+            data["X_test"], data["y_test"])
+    r_fact = DTSVM(base.replace(qp_solver="pallas_fused_multi",
+                                qp_operator="factored")).fit(
+        data["X"], data["y"], mask=data["mask"], adj=A).risks(
+            data["X_test"], data["y_test"])
+    np.testing.assert_allclose(np.asarray(r_fact), np.asarray(r_fista),
+                               atol=0.02)
+
+
+def test_bf16_fit_risk_delta_small():
+    """The mixed-precision mode is validated by risk deltas (never
+    bitwise): paper-style problem, bf16 Hessian tiles."""
+    data, A = _make(V=4, T=2, n=12, seed=6, n_test=200)
+    base = SolverConfig(C=0.01, iters=20, qp_iters=200,
+                        qp_solver="pallas_fused_multi")
+    r32 = DTSVM(base).fit(
+        data["X"], data["y"], mask=data["mask"], adj=A).risks(
+            data["X_test"], data["y_test"])
+    r16 = DTSVM(base.replace(qp_precision="bf16")).fit(
+        data["X"], data["y"], mask=data["mask"], adj=A).risks(
+            data["X_test"], data["y_test"])
+    assert float(np.max(np.abs(np.asarray(r16) - np.asarray(r32)))) < 0.05
+
+
+def test_session_threads_qp_modes_through_plan_path():
+    """OnlineSession with a non-default QP mode: jit=True falls back to
+    the plan path (the legacy jitted loop only knows materialized f32)
+    and both flavors land on the same factored classifier."""
+    data, A = _make(V=4, T=2, n=6)
+    cfg = SolverConfig(qp_iters=40, qp_solver="pallas_fused_multi",
+                       qp_operator="factored")
+    a = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                      config=cfg)
+    b = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                      jit=True, config=cfg)
+    a.run(4)
+    b.run(4)
+    _assert_states_equal(a.state, b.state)
+
+
+def test_sweep_rejects_non_default_qp_modes():
+    from repro.engine import sweep as sweep_lib
+    data, A = _make(V=3, T=1)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A)
+    cfgs = [SolverConfig(C=0.01, qp_solver="pallas_fused_multi",
+                         qp_operator="factored"),
+            SolverConfig(C=0.1, qp_solver="pallas_fused_multi",
+                         qp_operator="factored")]
+    with pytest.raises(ValueError, match="per-fit only"):
+        sweep_lib.compile_sweep(prob, cfgs)
+
+
+def test_plan_fingerprint_distinguishes_qp_modes():
+    data, A = _make(V=3, T=1)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A)
+    f = lambda **kw: engine.compile_problem(
+        prob, qp_solver="pallas_fused_multi", **kw).fingerprint()
+    prints = {f(), f(qp_precision="bf16"), f(qp_operator="factored")}
+    assert len(prints) == 3

@@ -159,3 +159,56 @@ def test_rope_preserves_norm(b, s, seed):
     np.testing.assert_allclose(
         np.linalg.norm(np.asarray(x), axis=-1),
         np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+@SET
+@given(n=st.integers(2, 24), seed=st.integers(0, 10_000),
+       iters=st.integers(1, 12), scale=st.floats(0.1, 4.0))
+def test_qp_engines_agree_from_random_warm_starts(n, seed, iters, scale):
+    """Out-of-the-box warm starts (possibly negative, possibly far above
+    hi): the engines that iterate the identical PG update agree —
+    bitwise on the shared oracle dispatch path for the multi engine vs
+    the iterated fused engine, to float tolerance for the vmapped "pg"
+    program — and every iterate lands inside the box.  This is the
+    regression property for the warm-start projection bug (the start
+    must be clipped BEFORE the first gradient step).
+
+    The oracle dispatch path is pinned: bitwise equality is a
+    per-dispatch-path contract (separately compiled kernel programs
+    agree to compiler-contraction tolerance only), so the property must
+    not flip paths under the pallas CI lane's REPRO_USE_PALLAS=1."""
+    import os
+    from unittest import mock
+
+    from repro.engine import qp_engines
+
+    ctx = mock.patch.dict(os.environ, {"REPRO_USE_PALLAS": "0"})
+    ctx.start()
+    try:
+        _check_engines_agree(qp_engines, n, seed, iters, scale)
+    finally:
+        ctx.stop()
+
+
+def _check_engines_agree(qp_engines, n, seed, iters, scale):
+    rng = np.random.default_rng(seed)
+    A = rng.normal(size=(n, n)).astype(np.float32)
+    K = jnp.asarray(A @ A.T / n)
+    q = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    hi = jnp.asarray(rng.uniform(0.1, 1.0, size=n).astype(np.float32))
+    lam0 = jnp.asarray(
+        (rng.uniform(-scale, scale, size=n)).astype(np.float32))
+    fused = qp_engines.get("pallas_fused")(K, q, hi, lam0, iters=iters)
+    multi = qp_engines.get("pallas_fused_multi")(K, q, hi, lam0,
+                                                 iters=iters)
+    pg = qp_engines.get("pg")(K, q, hi, lam0, iters=iters)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(multi))
+    np.testing.assert_allclose(np.asarray(pg), np.asarray(multi),
+                               rtol=3e-5, atol=3e-5)
+    fista = qp_engines.get("fista")(K, q, hi, lam0, iters=3000)
+    star = qp_engines.get("pg")(K, q, hi, lam0, iters=3000)
+    np.testing.assert_allclose(np.asarray(fista), np.asarray(star),
+                               atol=2e-3)
+    for out in (fused, multi, pg, fista):
+        assert float(jnp.min(out)) >= -1e-7
+        assert float(jnp.max(out - hi)) <= 1e-6

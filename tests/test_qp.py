@@ -78,3 +78,32 @@ def test_warm_start_converges_faster():
     warm = qp_lib.solve_box_qp_fista(Kj, qj, hij, iters=25, lam0=lam_star)
     obj = lambda lam: float(qp_lib.qp_objective(Kj, qj, lam))
     assert obj(warm) >= obj(cold) - 1e-6
+
+
+@pytest.mark.parametrize("solver", [qp_lib.solve_box_qp_pg,
+                                    qp_lib.solve_box_qp_fista])
+def test_warm_start_projected_before_first_step(solver):
+    """Regression lock: an out-of-box warm start must be projected into
+    [0, hi] BEFORE the first gradient step.  solve_box_qp_pg used to
+    skip the projection (the gradient then saw an infeasible iterate and
+    the first step amplified it); iters=0 exposes the raw handling."""
+    rng = np.random.default_rng(5)
+    K, q, hi = _rand_problem(rng, 20, box=0.5)
+    lam0 = np.full(20, 100.0, np.float32)          # far outside the box
+    out = solver(jnp.asarray(K), jnp.asarray(q), jnp.asarray(hi),
+                 iters=0, lam0=jnp.asarray(lam0))
+    np.testing.assert_allclose(np.asarray(out), np.clip(lam0, 0.0, hi))
+
+
+def test_warm_start_infeasible_stays_feasible_every_iter():
+    """With a projected warm start every PG iterate is feasible; one
+    step from an infeasible start must already be inside the box."""
+    rng = np.random.default_rng(6)
+    K, q, hi = _rand_problem(rng, 30, box=0.3)
+    lam0 = jnp.asarray(rng.uniform(-2.0, 2.0, 30).astype(np.float32))
+    for iters in (1, 2, 5):
+        lam = qp_lib.solve_box_qp_pg(jnp.asarray(K), jnp.asarray(q),
+                                     jnp.asarray(hi), iters=iters,
+                                     lam0=lam0)
+        assert float(jnp.min(lam)) >= 0.0
+        assert float(jnp.max(lam - jnp.asarray(hi))) <= 1e-7
