@@ -94,6 +94,31 @@ def run(fast: bool = False, out: str = None):
             spec, NetConfig(schedule=spec, seed=1),
             data, A, cfg, base_risks))
 
+    # -- convergence telemetry: residuals against the byte bill ---------
+    # telemetry is bitwise-invisible, so these fits land exactly where
+    # the sections above recorded; the fabric backend folds its
+    # per-round byte counts in as the ``bytes_round`` stream, which
+    # cumsum turns into the paper's "risk per byte spent" axis
+    convergence = {}
+    for name, net in [("float32", NetConfig()),
+                      ("float16", NetConfig(policy=LinkPolicy(
+                          quant="float16"))),
+                      ("int16", NetConfig(policy=LinkPolicy(
+                          quant="int16"))),
+                      ("int8", NetConfig(policy=LinkPolicy(
+                          quant="int8")))]:
+        solver, _ = _fit(data, A, cfg.replace(net=net, telemetry=True))
+        tel = solver.telemetry_
+        convergence[name] = {
+            "primal_residual": [round(float(x), 6) for x in
+                                np.asarray(tel["primal_residual"])],
+            "dual_residual": [round(float(x), 6) for x in
+                              np.asarray(tel["dual_residual"])],
+            "cumulative_bytes": [int(x) for x in
+                                 np.cumsum(np.asarray(
+                                     tel["bytes_round"], np.int64))],
+        }
+
     low_bit_ok = [r["name"] for r in quant
                   if r["name"] in ("int16", "int8", "float16")
                   and r["max_abs_risk_delta_vs_float32"] <= 1e-3]
@@ -112,6 +137,7 @@ def run(fast: bool = False, out: str = None):
         },
         "risk_vs_bytes": quant,
         "risk_vs_staleness": staleness,
+        "convergence": convergence,
         "acceptance": {
             "identity_bitwise": bitwise,
             "low_bit_configs_within_1e-3": low_bit_ok,

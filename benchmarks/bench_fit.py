@@ -163,6 +163,63 @@ def _bench_qp_modes(*, V=10, T=2, n_per_vt=128, p=10, iters=40,
     return out
 
 
+def _bench_convergence(*, V=10, T=2, n_per_vt=128, p=10, iters=40,
+                       qp_iters=100, seed=0):
+    """Convergence telemetry per QP engine: the ``repro.obs`` streams
+    as curves.  Telemetry is bitwise-invisible (tests/test_obs.py), so
+    turning it on here observes exactly the fit the other sections
+    time; the recorded trajectories are what ``python -m repro.obs
+    report`` renders and what a perf regression that *stalls* ADMM
+    (rather than slowing it) would show up in first."""
+    from repro.api import DTSVM, SolverConfig
+    from repro.obs import timing as obs_timing
+
+    n_train = np.full((V, T), n_per_vt, int)
+    data = synthetic.make_multitask_data(V=V, T=T, p=p, n_train=n_train,
+                                         n_test=64, seed=seed)
+    A = graph.make_graph("random", V, degree=0.8, seed=seed)
+    engines = {
+        "fista": {},
+        "pg": {"qp_solver": "pg"},
+        "pallas_fused": {"qp_solver": "pallas_fused"},
+        "pallas_fused_multi": {"qp_solver": "pallas_fused_multi"},
+        "factored": {"qp_solver": "pallas_fused_multi",
+                     "qp_operator": "factored"},
+    }
+    X = jnp.asarray(data["X"], jnp.float32)
+    y = jnp.asarray(data["y"], jnp.float32)
+    mask = jnp.asarray(data["mask"], jnp.float32)
+    jax.block_until_ready(X)
+    out = {"config": {"V": V, "T": T, "N": n_per_vt, "p": p,
+                      "iters": iters, "qp_iters": qp_iters,
+                      "backend": jax.default_backend()},
+           "engines": {}}
+    for name, kw in engines.items():
+        solver = DTSVM(SolverConfig(C=0.01, iters=iters,
+                                    qp_iters=qp_iters, telemetry=True,
+                                    **kw))
+
+        def fit_once():
+            solver.fit(X, y, mask=mask, adj=A)
+            return solver.state_
+
+        t = obs_timing.timeit(fit_once, repeats=1, warmup=0)
+        tel = solver.telemetry_
+        primal = np.asarray(tel["primal_residual"], np.float64)
+        dual = np.asarray(tel["dual_residual"], np.float64)
+        out["engines"][name] = {
+            "fit_s": round(t.best_s, 3),
+            "primal_residual": [round(float(x), 6) for x in primal],
+            "dual_residual": [round(float(x), 6) for x in dual],
+            "qp_active_frac": [round(float(x), 4) for x in
+                               np.asarray(tel["qp_active_frac"])],
+            "final_max_disagreement": float(
+                np.asarray(tel["disagreement"])[-1].max()),
+            "primal_drop": float(primal[0] / max(primal[-1], 1e-12)),
+        }
+    return out
+
+
 def _legacy_run(prob, iters, qp_iters, state):
     def body(st, _):
         return core.dtsvm_step(st, prob, qp_iters), jnp.float32(0)
@@ -259,12 +316,15 @@ def run(fast: bool = False):
                                       e2_grid=(1.0, 10.0), repeats=1),
                 "qp_modes": _bench_qp_modes(V=4, T=2, n_per_vt=24,
                                             iters=8, qp_iters=30,
-                                            n_test=64)}
+                                            n_test=64),
+                "convergence": _bench_convergence(V=4, T=2, n_per_vt=24,
+                                                  iters=8, qp_iters=30)}
     recs = {
         "paper": _bench_one(30, 4, 256, 10, 60, 100),
         "wide_p64": _bench_one(30, 4, 256, 64, 60, 100),
         "sweep": _bench_sweep(60, 100),
         "qp_modes": _bench_qp_modes(),
+        "convergence": _bench_convergence(),
     }
     # fast mode is a smoke run on a toy config — never clobber the
     # committed paper-regime perf-trajectory record with it; a full run
@@ -292,6 +352,14 @@ def main(fast=False):
                  f"serial_ms_fit={rec['serial_ms_per_fit']:.1f} "
                  f"batched_ms_fit={rec['batched_ms_per_fit']:.1f} "
                  f"configs={rec['config']['n_configs']}")
+            continue
+        if name == "convergence":
+            e = rec["engines"]["fista"]
+            emit("bench_fit_convergence", 1e6 * e["fit_s"],
+                 f"primal_drop={e['primal_drop']:.1f}x "
+                 f"final_dual={e['dual_residual'][-1]:.2e} "
+                 f"active_frac={e['qp_active_frac'][-1]:.2f} "
+                 f"engines={len(rec['engines'])}")
             continue
         if name == "qp_modes":
             m = rec["modes"]

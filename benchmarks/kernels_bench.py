@@ -1,24 +1,19 @@
 """Microbenchmarks of the paper's compute hot spots: the weighted-Gram
 Hessian build and the fused QP step (jnp execution path — the Pallas
 kernels target TPU and are validated separately in interpret mode)."""
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from common import emit
 from repro.kernels import ref
+from repro.obs import timing as obs_timing
 
 
 def _time(fn, *args, iters=20):
-    out = fn(*args)
-    jax.block_until_ready(out)
-    t0 = time.time()
-    for _ in range(iters):
-        out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.time() - t0) / iters
+    """Mean seconds/call on the shared ``repro.obs.timing`` clock (one
+    blocked warmup call absorbs the compile)."""
+    return obs_timing.timeit(fn, *args, repeats=iters, warmup=1).mean_s
 
 
 def main(fast=False):

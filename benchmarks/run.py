@@ -30,6 +30,7 @@ def main() -> None:
     import fig5_unbalanced
     import fig6_mixed
     import fig7_online
+    import hillclimb
     import kernels_bench
     import roofline
 
@@ -44,6 +45,7 @@ def main() -> None:
         "scale": bench_scale.main,
         "serve": bench_serve.main,
         "kernels": kernels_bench.main,
+        "hillclimb": hillclimb.main,
         "roofline": roofline.main,
     }
     only = set(args.only.split(",")) if args.only else None

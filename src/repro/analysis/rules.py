@@ -74,6 +74,7 @@ HOT_ROOTS = frozenset({
     "solve_box_qp_pg", "solve_box_qp_fista",
     "weighted_gram", "weighted_gram_rows", "qp_pg_step", "qp_pg_multi",
     "_qp_rows",
+    "collect_diagnostics", "collect_shard_diagnostics",
 })
 
 
@@ -236,7 +237,7 @@ class ScalarCloseInScan(Rule):
     history = ("PR 3: hyper-parameters closed over by the ADMM scan "
                "body compiled differently from the sweep loop; fixed "
                "by storing problem scalars as 0-d jnp arrays")
-    paths = ("engine/", "net/", "core/", "kernels/", "api/")
+    paths = ("engine/", "net/", "core/", "kernels/", "api/", "obs/")
 
     def check(self, mod: SourceModule) -> Iterator[Finding]:
         """Scan each function scope for control-flow calls whose
@@ -382,7 +383,8 @@ class HostSyncInHotPath(Rule):
                "reachable from a traced hot root")
     history = ("standing contract since PR 2: the per-iteration step "
                "is pure jnp so every backend lowers it identically")
-    paths = ("engine/", "net/", "core/", "kernels/", "api/", "serve/")
+    paths = ("engine/", "net/", "core/", "kernels/", "api/", "serve/",
+             "obs/")
 
     def check(self, mod: SourceModule) -> Iterator[Finding]:
         """Flag host round-trips in the hot-reachable call set."""
@@ -445,7 +447,8 @@ class RawEinsumInPlan(Rule):
     history = ("PR 3: the q linear term was converted to mul+reduce "
                "after einsum lowered differently under vmap vs the "
                "sweep's stacked trace")
-    paths = ("engine/", "net/", "core/", "kernels/", "api/", "serve/")
+    paths = ("engine/", "net/", "core/", "kernels/", "api/", "serve/",
+             "obs/")
 
     def check(self, mod: SourceModule) -> Iterator[Finding]:
         """Flag einsum calls in the hot-reachable call set."""
@@ -540,6 +543,68 @@ class EnvDependentDtype(Rule):
 
 
 # ----------------------------------------------------------------------
+# telemetry-read-in-kernel
+# ----------------------------------------------------------------------
+
+
+class TelemetryReadInKernel(Rule):
+    """``repro.obs`` imported or telemetry collected inside the kernel
+    package.
+
+    The telemetry contract (PR 9) is that diagnostics are extra *scan
+    outputs* computed by the engine's step body — the Pallas kernels
+    stay observation-free so their lowering (and the compile-once /
+    bitwise guarantees built on it) never depends on whether telemetry
+    is enabled.  A ``collect_diagnostics`` call (or any ``repro.obs``
+    import) under ``kernels/`` threads observation into the lowered
+    program itself, where a telemetry toggle would change the kernel.
+    """
+    id = "telemetry-read-in-kernel"
+    summary = ("repro.obs imported / telemetry collected inside the "
+               "kernel package — kernels must stay observation-free")
+    history = ("PR 9 contract: telemetry is collected by the engine "
+               "step as extra scan outputs only, so telemetry-on is "
+               "bitwise telemetry-off and kernels compile once")
+    paths = ("kernels/",)
+
+    _COLLECTORS = ("collect_diagnostics", "collect_shard_diagnostics")
+
+    def check(self, mod: SourceModule) -> Iterator[Finding]:
+        """Flag obs imports and collector calls anywhere in the file."""
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "repro.obs" or a.name.startswith(
+                            "repro.obs."):
+                        yield self.finding(
+                            mod, node.lineno,
+                            f"import {a.name} inside kernels/ — the "
+                            "kernel package is observation-free; "
+                            "collect telemetry in the engine step")
+            elif isinstance(node, ast.ImportFrom):
+                names = {a.name for a in node.names}
+                from_obs = node.module is not None and (
+                    node.module == "repro.obs"
+                    or node.module.startswith("repro.obs."))
+                if from_obs or (node.module == "repro"
+                                and "obs" in names):
+                    yield self.finding(
+                        mod, node.lineno,
+                        "repro.obs imported inside kernels/ — the "
+                        "kernel package is observation-free; collect "
+                        "telemetry in the engine step")
+            elif isinstance(node, ast.Call):
+                d = _dotted(node.func)
+                if d and d.rsplit(".", 1)[-1] in self._COLLECTORS:
+                    yield self.finding(
+                        mod, node.lineno,
+                        f"{d}() inside kernels/ — telemetry is an "
+                        "engine-step scan output, never part of the "
+                        "lowered kernel (a toggle would change the "
+                        "compiled program)")
+
+
+# ----------------------------------------------------------------------
 # registry
 # ----------------------------------------------------------------------
 
@@ -550,6 +615,7 @@ _REGISTRY: Dict[str, Rule] = {r.id: r for r in [
     RawEinsumInPlan(),
     UntiledGramCall(),
     EnvDependentDtype(),
+    TelemetryReadInKernel(),
 ]}
 
 #: meta rule ids raised by the linter itself (not suppressible targets)

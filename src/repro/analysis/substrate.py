@@ -106,6 +106,18 @@ def substrate_report(pkg_dir: str = None) -> Dict[str, List[str]]:
             if dep not in seen:
                 seen.add(dep)
                 work.append(dep)
+    # a ``python -m`` entry point of a live package is itself live —
+    # nothing imports a __main__, so the plain walk cannot see it
+    mains = [m for m in graph
+             if m.endswith(".__main__")
+             and m.rsplit(".", 1)[0] in seen and m not in seen]
+    seen.update(mains)
+    work = list(mains)
+    while work:
+        for dep in graph.get(work.pop(), ()):
+            if dep not in seen:
+                seen.add(dep)
+                work.append(dep)
     reachable = sorted(m for m in seen if m not in tooling)
     substrate = sorted(m for m in graph
                        if m not in seen and m not in tooling)

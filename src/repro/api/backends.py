@@ -54,6 +54,7 @@ from repro.core import dtsvm as core
 from repro.core import dtsvm_dist
 from repro.engine import plan as engine_plan
 from repro.net import async_admm
+from repro.obs import telemetry as obs_telemetry
 
 _REGISTRY: Dict[str, Callable] = {}
 
@@ -87,6 +88,7 @@ def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
               qp_operator: str = "materialized",
               state: Optional[core.DTSVMState] = None, eval_fn=None,
               plan: Optional[engine_plan.Plan] = None, budget=None,
+              telemetry=None, telemetry_out: Optional[dict] = None,
               **_ignored):
     """Single-host backend: one compiled plan, one scanned fit.
 
@@ -110,6 +112,13 @@ def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
         Streams the invariant (K) build through bounded row panels —
         bitwise identical to the dense build (ignored when ``plan`` is
         prebuilt).
+    telemetry : repro.obs.Telemetry, optional
+        Collect per-iteration convergence diagnostics inside the fit's
+        scan (extra scan outputs — the model outputs stay bitwise).
+    telemetry_out : dict, optional
+        Receives ``{"streams": {name: np.ndarray}}`` (materialized after
+        the scan) — the ``(state, history)`` return contract leaves no
+        slot for the streams.
 
     Returns
     -------
@@ -129,7 +138,13 @@ def _run_vmap(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
             "prebuilt plan= disagrees with the call: pass prob=plan.prob "
             "and matching qp_iters/qp_solver/qp_precision/qp_operator "
             "(or omit plan=)")
-    return plan.run(state=state, iters=iters, eval_fn=eval_fn)
+    if telemetry is None:
+        return plan.run(state=state, iters=iters, eval_fn=eval_fn)
+    st, hist, streams = plan.run(state=state, iters=iters, eval_fn=eval_fn,
+                                 telemetry=telemetry)
+    if telemetry_out is not None:
+        telemetry_out["streams"] = obs_telemetry.materialize(streams)
+    return st, hist
 
 
 @register("shard_map")
@@ -137,26 +152,31 @@ def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
                    qp_iters: int = 200, qp_solver: str = "fista",
                    state: Optional[core.DTSVMState] = None, eval_fn=None,
                    topology: str = "graph", mesh=None, axis: str = "nodes",
-                   budget=None):
+                   budget=None, telemetry=None,
+                   telemetry_out: Optional[dict] = None):
     """One device per network node; neighbor sums as collectives.
 
     ``topology`` selects ``"graph"`` (all_gather + adjacency mask) or
     ``"ring"`` (two ppermute exchanges); ``budget``
     (``engine.PlanBudget``) streams each node's local K build.  Same
-    ``(state, history)`` contract as ``"vmap"``.
+    ``(state, history)`` contract as ``"vmap"``.  ``telemetry`` routes
+    through the planned-runner host loop (like ``eval_fn``) and
+    collects the diagnostics from each round's committed state — the
+    per-round states are bitwise the scanned path's, so the streams
+    are too.
     """
     if topology not in ("graph", "ring"):
         raise ValueError(f"unknown topology {topology!r}; "
                          f"expected 'graph' or 'ring'")
-    if eval_fn is None:
+    if eval_fn is None and telemetry is None:
         st = dtsvm_dist.run_dtsvm_dist(prob, iters, mesh=mesh, axis=axis,
                                        topology=topology, qp_iters=qp_iters,
                                        state=state, qp_solver=qp_solver,
                                        budget=budget)
         return st, None
-    # per-iteration history: compile the node-sharded plan invariants
-    # ONCE, then step against them between host evaluations.  The
-    # decentralized deployment would log locally instead.
+    # per-iteration history/telemetry: compile the node-sharded plan
+    # invariants ONCE, then step against them between host evaluations.
+    # The decentralized deployment would log locally instead.
     if mesh is None:
         mesh = dtsvm_dist.make_node_mesh(prob.X.shape[0], axis)
     compile_fn, run1 = dtsvm_dist.build_planned_runner(
@@ -164,12 +184,26 @@ def _run_shard_map(prob: core.DTSVMProblem, iters: int, *,
         qp_solver=qp_solver, budget=budget)
     inv = compile_fn(prob)
     st = core.init_state(prob) if state is None else state
-    hist = []
+    hi = None
+    if telemetry is not None:
+        from repro.engine import invariants as inv_lib
+        hi = inv_lib._masks_part(prob)[4]
+    hist, tel_rows = [], []
     for _ in range(iters):
+        prev = st
         st = run1(st, prob, inv)
-        hist.append(eval_fn(st))
+        if eval_fn is not None:
+            hist.append(eval_fn(st))
+        if telemetry is not None:
+            tel_rows.append(telemetry.collect(prob, hi, st, prev))
+    if telemetry_out is not None and tel_rows:
+        import numpy as np
+        telemetry_out["streams"] = {
+            k: np.stack([np.asarray(row[k], np.float32)
+                         for row in tel_rows])
+            for k in tel_rows[0]}
     import jax.numpy as jnp
-    return st, jnp.stack(hist)
+    return st, (jnp.stack(hist) if eval_fn is not None else None)
 
 
 @register("async")
@@ -178,13 +212,16 @@ def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
                state: Optional[core.DTSVMState] = None, eval_fn=None,
                net=None, plan: Optional[engine_plan.Plan] = None,
                fabric=None, fabric_state=None, round0: int = 0,
-               meter_out: Optional[dict] = None, budget=None):
+               meter_out: Optional[dict] = None, budget=None,
+               telemetry=None, telemetry_out: Optional[dict] = None):
     """The communication fabric (``repro.net``): the same compiled plan
     stepped against per-node mailboxes behind lossy/delayed/quantized
     links, with byte metering.  ``net`` is a ``repro.net.NetConfig``;
     ``meter_out`` (a dict) receives the byte report and final fabric
     state; ``budget`` streams the plan's K build when no prebuilt
-    ``plan`` is passed.
+    ``plan`` is passed; ``telemetry`` / ``telemetry_out`` collect the
+    per-round convergence streams (plus ``bytes_round``) from the same
+    scan.
     """
     if plan is not None and (plan.prob is not prob
                              or plan.qp_iters != qp_iters
@@ -195,11 +232,14 @@ def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
     res = async_admm.run_async(
         prob, iters, net=net, plan=plan, fabric=fabric,
         fabric_state=fabric_state, qp_iters=qp_iters, qp_solver=qp_solver,
-        state=state, eval_fn=eval_fn, round0=round0, budget=budget)
+        state=state, eval_fn=eval_fn, round0=round0, budget=budget,
+        telemetry=telemetry)
     if meter_out is not None:
         meter_out["report"] = res.report
         meter_out["fabric"] = res.fabric
         meter_out["fabric_state"] = res.fabric_state
+    if telemetry_out is not None and res.telemetry is not None:
+        telemetry_out["streams"] = res.telemetry
     return res.state, res.history
 
 
@@ -249,7 +289,8 @@ def _run_sample_shard(prob: core.DTSVMProblem, iters: int, *,
                       state: Optional[core.DTSVMState] = None, eval_fn=None,
                       mesh=None, n_shards: Optional[int] = None,
                       axis: str = "samples", reduce: str = "gather",
-                      budget=None, **_ignored):
+                      budget=None, telemetry=None,
+                      telemetry_out: Optional[dict] = None, **_ignored):
     """Split every node's local samples across devices (the large-n path).
 
     Each device owns an N/S row slice of the (V, T, N, p) problem tensor
@@ -283,6 +324,10 @@ def _run_sample_shard(prob: core.DTSVMProblem, iters: int, *,
     engine assumes the square single-device Hessian).  ``eval_fn`` runs
     inside the shard and must depend only on the replicated state leaves
     (``r``/``alpha``/``beta``) — the standard risk hook does.
+    ``telemetry`` collects inside the shard too: the state streams come
+    from the replicated ``r``, the box-face fraction from per-shard
+    partial sums combined with one psum
+    (``obs.telemetry.collect_shard_diagnostics``).
     """
     import jax
     import jax.numpy as jnp
@@ -350,15 +395,22 @@ def _run_sample_shard(prob: core.DTSVMProblem, iters: int, *,
             return core.DTSVMState(r=r_new, alpha=alpha, beta=beta, lam=lam)
 
         def body(s, _):
-            s = step(s)
-            out = eval_fn(s) if eval_fn is not None else jnp.float32(0)
-            return s, out
+            new = step(s)
+            out = eval_fn(new) if eval_fn is not None else jnp.float32(0)
+            # None is an empty pytree node: telemetry-off scans carry
+            # exactly the original outputs (bitwise contract)
+            tel = (None if telemetry is None
+                   else obs_telemetry.collect_shard_diagnostics(
+                       pr, hi_rows, new, s, telemetry.streams, axis))
+            return new, (out, tel)
 
         return jax.lax.scan(body, st, None, length=iters)
 
     if state is None:
         state = core.init_state(prob)
-    st, hist = jax.jit(run_shard)(state, prob)
+    st, (hist, tel_streams) = jax.jit(run_shard)(state, prob)
+    if telemetry_out is not None and tel_streams is not None:
+        telemetry_out["streams"] = obs_telemetry.materialize(tel_streams)
     return st, (hist if eval_fn is not None else None)
 
 
@@ -371,7 +423,9 @@ def run(prob: core.DTSVMProblem, iters: int, *, backend: str = "vmap",
     ``backend`` is a registry name (``names()`` lists them:
     ``"vmap" | "shard_map" | "async" | "sample_shard"``); ``options``
     pass through to the backend runner (e.g. ``topology=``, ``net=``,
-    ``n_shards=``, ``budget=``).  Returns ``(state, history | None)``.
+    ``n_shards=``, ``budget=``, ``telemetry=``/``telemetry_out=`` —
+    every backend collects the obs convergence streams).  Returns
+    ``(state, history | None)``.
 
     The mixed-precision / factored-operator QP modes
     (``qp_precision="bf16"`` / ``qp_operator="factored"``) are a

@@ -63,6 +63,7 @@ from repro.api.solvers import SolverConfig, _as_solver_config, \
     effective_backend
 from repro.core import dtsvm as core
 from repro.engine import plan as engine_plan
+from repro.obs import telemetry as obs_telemetry
 
 
 @functools.partial(jax.jit, static_argnames=("iters", "qp_iters",
@@ -113,6 +114,9 @@ class OnlineSession:
         self._net_state = None
         self._net_series = []        # per-round bytes, across all stages
         self.net_report_: Optional[dict] = None
+        # obs convergence streams, concatenated across run() calls when
+        # config.telemetry is set (repro.obs; iteration axis = rounds)
+        self.telemetry_: Optional[dict] = None
         if jit and self._effective_backend() == "async":
             raise ValueError("jit=True is a vmap-session feature; the "
                              "async fabric already scans its rounds — "
@@ -269,8 +273,10 @@ class OnlineSession:
             "f32", "materialized")
         # the legacy jitted fast path runs the core loop, which only
         # knows the materialized f32 operator — non-default QP modes
-        # take the plan path below, which threads them through.
-        if self._jit and backend == "vmap" and default_qp_mode:
+        # and telemetry collection take the plan path below, which
+        # threads them through.
+        if self._jit and backend == "vmap" and default_qp_mode \
+                and not cfg.telemetry:
             Xte, yte = self._test if with_eval else (None, None)
             prob = self.problem()
             if self.state is None:
@@ -303,6 +309,9 @@ class OnlineSession:
             if backend == "async":
                 options.update(self._async_net_kwargs(was_dirty,
                                                       old_active, plan))
+            if cfg.telemetry:
+                options["telemetry"] = obs_telemetry.Telemetry()
+                options["telemetry_out"] = {}
             self.state, hist = backends.run(
                 prob, iters, backend=backend, qp_iters=cfg.qp_iters,
                 qp_solver=cfg.qp_solver, qp_precision=cfg.qp_precision,
@@ -314,6 +323,11 @@ class OnlineSession:
                 self._net_state = out["fabric_state"]
                 self._net_series.extend(
                     out["report"]["bytes_round_series"])
+            if cfg.telemetry:
+                streams = options["telemetry_out"].get("streams")
+                if streams is not None:
+                    self.telemetry_ = obs_telemetry.concat_streams(
+                        self.telemetry_, streams)
         self.iteration += iters
         if backend == "async":
             from repro.net import meter

@@ -35,6 +35,7 @@ from repro.core import dsvm as dsvm_lib
 from repro.core import dtsvm as core
 from repro.engine.invariants import PlanBudget
 from repro.net.policies import NetConfig
+from repro.obs.telemetry import Telemetry
 
 
 @dataclass(frozen=True)
@@ -86,6 +87,12 @@ class SolverConfig:
         Memory budget for the invariant (K) build: streams the Gram
         construction through bounded row panels — bitwise identical to
         the dense build (the large-n scale path; API.md §scale).
+    telemetry : bool
+        Collect per-iteration convergence streams (``repro.obs``:
+        primal/dual residuals, per-task disagreement, QP box
+        saturation) inside the fit's own scan; read them from
+        ``solver.telemetry_``.  Guaranteed bitwise-invisible on all
+        model outputs and retrace-free (docs/observability.md).
     """
     C: float = 0.01
     eps1: float = 1.0
@@ -106,6 +113,7 @@ class SolverConfig:
     # setting it routes the default backend to "async" — the identity
     # NetConfig() reproduces the vmap trajectory bitwise, now metered
     budget: Optional[PlanBudget] = None   # large-n K-build streaming
+    telemetry: bool = False          # per-iteration obs streams (repro.obs)
 
     def replace(self, **kw) -> "SolverConfig":
         """A copy with the given fields replaced (frozen dataclass)."""
@@ -144,6 +152,7 @@ class SolverConfig:
              else int(self.budget.max_elems),
              "tile": None if self.budget.tile is None
              else [int(t) for t in self.budget.tile]},
+            "telemetry": bool(self.telemetry),
         }
 
     @classmethod
@@ -216,6 +225,7 @@ class _ConsensusSolver:
         self.state_: Optional[core.DTSVMState] = None
         self.history_ = None
         self.net_report_: Optional[Dict[str, Any]] = None   # async backend
+        self.telemetry_: Optional[Dict[str, Any]] = None    # obs streams
 
     # -- problem construction (the one subclass hook) ----------------------
     def make_problem(self, X, y, mask=None, adj=None, *, active=None,
@@ -239,9 +249,11 @@ class _ConsensusSolver:
             iters: Optional[int] = None, state: Optional[core.DTSVMState]
             = None, eval_fn=None, X_test=None, y_test=None):
         """Run ADMM on (X, y).  Returns self; state/history are stored on
-        ``state_`` / ``history_``.  Passing ``state`` warm-starts (the
-        online setting); ``X_test``/``y_test`` record a per-iteration risk
-        curve without any manual broadcasting."""
+        ``state_`` / ``history_`` (and, with ``config.telemetry``, the
+        per-iteration convergence streams on ``telemetry_``).  Passing
+        ``state`` warm-starts (the online setting); ``X_test``/``y_test``
+        record a per-iteration risk curve without any manual
+        broadcasting."""
         prob = self.make_problem(X, y, mask, adj, active=active,
                                  couple=couple)
         if eval_fn is None and X_test is not None:
@@ -254,6 +266,9 @@ class _ConsensusSolver:
             options.setdefault("budget", cfg.budget)
         if backend == "async":
             options.setdefault("meter_out", {})
+        if cfg.telemetry:
+            options.setdefault("telemetry", Telemetry())
+            options.setdefault("telemetry_out", {})
         self.state_, self.history_ = backends.run(
             prob, iters if iters is not None else cfg.iters,
             backend=backend, qp_iters=cfg.qp_iters,
@@ -261,6 +276,7 @@ class _ConsensusSolver:
             qp_operator=cfg.qp_operator, state=state,
             eval_fn=eval_fn, **options)
         self.net_report_ = options.get("meter_out", {}).get("report")
+        self.telemetry_ = options.get("telemetry_out", {}).get("streams")
         self.problem_ = prob
         return self
 
@@ -370,6 +386,11 @@ class CSVM:
             raise ValueError("SolverConfig.net models a decentralized "
                              "network; CSVM is centralized (no links to "
                              "model) — drop net or use DSVM/DTSVM")
+        if self.config.telemetry:
+            raise ValueError("SolverConfig.telemetry streams the ADMM "
+                             "loop's consensus diagnostics; CSVM is a "
+                             "direct (single-shot) solver — drop "
+                             "telemetry or use DSVM/DTSVM")
         X = np.asarray(X, np.float32)
         y = np.asarray(y, np.float32)
         if X.ndim == 2:                       # single task, pooled already

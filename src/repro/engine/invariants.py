@@ -43,6 +43,7 @@ import numpy as np
 from repro.core import dtsvm as core
 from repro.core import qp as qp_lib
 from repro.kernels import ops as kops
+from repro.obs import spans as obs_spans
 
 
 class PlanBudget(NamedTuple):
@@ -291,14 +292,17 @@ def compute_invariants(prob: core.DTSVMProblem, *,
     discarded row panels (``streamed_lipschitz``) — the whole invariant
     set is O(N D) instead of O(N^2).
     """
-    ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
-    if Z is None:
-        Z = compute_z(prob)
-    if materialize_k:
-        K, L = gram_and_lipschitz(Z, a, budget)
-    else:
-        K, L = None, streamed_lipschitz(Z, a, budget)
-    return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi, L=L)
+    with obs_spans.span("invariant_build", budgeted=budget is not None,
+                        materialize_k=materialize_k):
+        ntp, nbr, u, a, hi = _masks_part(prob, nbr_counts)
+        if Z is None:
+            Z = compute_z(prob)
+        if materialize_k:
+            K, L = gram_and_lipschitz(Z, a, budget)
+        else:
+            K, L = None, streamed_lipschitz(Z, a, budget)
+        return PlanInvariants(ntp=ntp, nbr=nbr, u=u, a=a, Z=Z, K=K, hi=hi,
+                              L=L)
 
 
 def update_invariants(prob: core.DTSVMProblem, inv: PlanInvariants, *,

@@ -34,6 +34,7 @@ import numpy as np
 from repro.core import dtsvm as core
 from repro.engine import invariants as inv_lib
 from repro.engine import qp_engines
+from repro.obs import spans as obs_spans
 
 DEFAULT_QP_SOLVER = "fista"
 
@@ -161,20 +162,42 @@ class Plan:
                          nbr_reduce=self._nbr_reduce)
 
     def run(self, state: Optional[core.DTSVMState] = None, iters: int = 1,
-            eval_fn: Optional[Callable] = None):
+            eval_fn: Optional[Callable] = None, telemetry=None):
         """Scan ``iters`` iterations.  Returns (state, history) where
         history stacks ``eval_fn(state)`` after every iteration (or
-        None) — the same contract as the legacy ``run_dtsvm``."""
+        None) — the same contract as the legacy ``run_dtsvm``.
+
+        With ``telemetry`` (a ``repro.obs.Telemetry``) the scan
+        additionally stacks per-iteration convergence diagnostics and
+        the return becomes ``(state, history, streams)`` — the state
+        carry is untouched (extra scan *outputs* only), so the model
+        outputs are bitwise identical to the telemetry-None call, and
+        the collector traces once inside the same scan body (zero extra
+        retraces).  The streams are still on device; materialize them
+        after the scan (``repro.obs.materialize``)."""
         if state is None:
             state = self.init_state()
+        if telemetry is None:
+            def body(st, _):
+                st = self.step(st)
+                out = eval_fn(st) if eval_fn is not None else jnp.float32(0)
+                return st, out
+
+            with obs_spans.span("scan_execute", iters=int(iters)):
+                state, hist = jax.lax.scan(body, state, None, length=iters)
+            return state, (hist if eval_fn is not None else None)
 
         def body(st, _):
-            st = self.step(st)
-            out = eval_fn(st) if eval_fn is not None else jnp.float32(0)
-            return st, out
+            new = self.step(st)
+            out = eval_fn(new) if eval_fn is not None else jnp.float32(0)
+            tel = telemetry.collect(self.prob, self.inv.hi, new, st)
+            return new, (out, tel)
 
-        state, hist = jax.lax.scan(body, state, None, length=iters)
-        return state, (hist if eval_fn is not None else None)
+        with obs_spans.span("scan_execute", iters=int(iters),
+                            telemetry=True):
+            state, (hist, streams) = jax.lax.scan(body, state, None,
+                                                  length=iters)
+        return state, (hist if eval_fn is not None else None), streams
 
     # -- identity --------------------------------------------------------
     def fingerprint(self) -> str:
@@ -201,9 +224,10 @@ class Plan:
         ``invariants.update_invariants``).  The plan's ``budget``
         carries over, so rebuilt K slices stream through the same
         bounded row panels as the original build."""
-        prob, inv, n = inv_lib.update_invariants(
-            self.prob, self.inv, active=active, couple=couple,
-            budget=self.budget)
+        with obs_spans.span("plan_replan"):
+            prob, inv, n = inv_lib.update_invariants(
+                self.prob, self.inv, active=active, couple=couple,
+                budget=self.budget)
         V, T = prob.X.shape[:2]
         stats = dict(self.stats)
         stats["replans"] += 1
@@ -300,9 +324,12 @@ def compile_problem(prob: core.DTSVMProblem, cfg=None, *,
             raise ValueError("qp_operator='factored' is f32-only "
                              "(the low-rank matvec never streams K "
                              "tiles, so bf16 K has nothing to apply to)")
-    inv = inv_lib.compute_invariants(
-        prob, nbr_counts=nbr_counts, budget=budget,
-        materialize_k=(qp_operator != "factored"))
-    return Plan(prob, inv, qp_iters=qp_iters, qp_solver=qp_solver,
-                qp_precision=qp_precision, qp_operator=qp_operator,
-                nbr_reduce=nbr_reduce, budget=budget)
+    with obs_spans.span("plan_compile", qp_solver=qp_solver,
+                        qp_operator=qp_operator,
+                        budgeted=budget is not None):
+        inv = inv_lib.compute_invariants(
+            prob, nbr_counts=nbr_counts, budget=budget,
+            materialize_k=(qp_operator != "factored"))
+        return Plan(prob, inv, qp_iters=qp_iters, qp_solver=qp_solver,
+                    qp_precision=qp_precision, qp_operator=qp_operator,
+                    nbr_reduce=nbr_reduce, budget=budget)

@@ -40,6 +40,7 @@ from repro.net import fabric as fabric_lib
 from repro.net import meter as meter_lib
 from repro.net import schedule as schedule_lib
 from repro.net.policies import NetConfig
+from repro.obs import telemetry as obs_telemetry
 
 
 class AsyncResult(NamedTuple):
@@ -48,6 +49,9 @@ class AsyncResult(NamedTuple):
     fabric_state: fabric_lib.FabricState
     report: dict                      # byte/message accounting (meter)
     fabric: fabric_lib.Fabric
+    #: materialized per-round convergence streams (+ ``bytes_round``)
+    #: when a ``telemetry=`` spec was passed, else None
+    telemetry: Optional[dict] = None
 
 
 def _fabric_step(plan: engine_plan.Plan, fab: fabric_lib.Fabric,
@@ -99,7 +103,7 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
               qp_iters: int = 200, qp_solver: str = "fista",
               state: Optional[core.DTSVMState] = None,
               eval_fn: Optional[Callable] = None,
-              round0: int = 0, budget=None) -> AsyncResult:
+              round0: int = 0, budget=None, telemetry=None) -> AsyncResult:
     """Run ``iters`` asynchronous rounds of Prop. 1 over the fabric.
 
     ``net`` declares the communication model (default: identity — the
@@ -111,6 +115,13 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
     enters the schedule stream at that absolute round (and, when
     ``fabric_state`` is None, starts the fabric's round counter there —
     a carried fabric_state keeps its own).
+
+    ``telemetry`` (a ``repro.obs.Telemetry``) collects per-round
+    convergence diagnostics inside the same scan — extra scan outputs
+    only, so the state/mailbox trajectory is bitwise the telemetry-None
+    run — and folds the fabric's per-round byte counts in as a
+    ``bytes_round`` stream; the materialized dict lands on
+    ``AsyncResult.telemetry``.
     """
     net = net if net is not None else NetConfig()
     if plan is None:
@@ -144,16 +155,24 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
         st, fst = carry
         act, lnk = x
         lnk = lnk if has_links else None
-        st, fst, bytes_now = _fabric_step(plan, fabric, st, fst, act, lnk,
-                                          task_counts)
-        ev = eval_fn(st) if eval_fn is not None else jnp.float32(0)
-        return (st, fst), (ev, bytes_now)
+        new, fst, bytes_now = _fabric_step(plan, fabric, st, fst, act, lnk,
+                                           task_counts)
+        ev = eval_fn(new) if eval_fn is not None else jnp.float32(0)
+        # None is an empty pytree node: the telemetry-off scan carries
+        # exactly the original outputs (bitwise contract)
+        tel = (None if telemetry is None
+               else telemetry.collect(plan.prob, plan.inv.hi, new, st))
+        return (new, fst), (ev, bytes_now, tel)
 
-    (state, fabric_state), (hist, bytes_rounds) = jax.lax.scan(
+    (state, fabric_state), (hist, bytes_rounds, tel_streams) = jax.lax.scan(
         body, (state, fabric_state), xs, length=iters)
     report = meter_lib.report(fabric, fabric_state, rounds=iters,
                               bytes_per_round=bytes_rounds)
+    tel_out = None
+    if telemetry is not None:
+        tel_out = obs_telemetry.materialize(tel_streams)
+        tel_out["bytes_round"] = np.asarray(bytes_rounds, np.float32)
     return AsyncResult(state=state,
                        history=hist if eval_fn is not None else None,
                        fabric_state=fabric_state, report=report,
-                       fabric=fabric)
+                       fabric=fabric, telemetry=tel_out)

@@ -1,0 +1,37 @@
+"""repro.obs — observability: telemetry streams, spans, metrics registry.
+
+Three small, dependency-light pieces (nothing here imports the engine,
+so every layer of the system can import obs without cycles):
+
+- ``obs.telemetry`` — device-side per-iteration ADMM diagnostics
+  (primal/dual residuals, per-task disagreement, QP box saturation),
+  collected inside the fit's own scan and materialized only after it;
+  telemetry-on is bitwise telemetry-off on all model outputs.  Enable
+  with ``SolverConfig(telemetry=True)``; read ``solver.telemetry_`` /
+  ``session.telemetry_``.
+- ``obs.spans`` — host-side phase timing (invariant builds, plan
+  compiles, scans, snapshots, serve batches) exported as Chrome-trace
+  JSON.
+- ``obs.registry`` — ``MetricsRegistry``: one versioned JSON document
+  absorbing ``net_report_``, serve stats, ``plan_stats`` and telemetry
+  summaries; ``python -m repro.obs report`` renders it.
+
+``obs.timing.timeit`` is the shared benchmark-timing helper (warmup +
+``perf_counter`` + ``block_until_ready``).  See docs/observability.md.
+"""
+from repro.obs.registry import OBS_SCHEMA_VERSION, MetricsRegistry
+from repro.obs.spans import (clear_spans, dropped_spans, iter_spans,
+                             save_trace, span, to_chrome_trace,
+                             validate_chrome_trace)
+from repro.obs.telemetry import (STREAMS, Telemetry, collect_diagnostics,
+                                 concat_streams, materialize, summarize)
+from repro.obs.timing import Timing, timeit
+
+__all__ = [
+    "OBS_SCHEMA_VERSION", "MetricsRegistry",
+    "clear_spans", "dropped_spans", "iter_spans", "save_trace", "span",
+    "to_chrome_trace", "validate_chrome_trace",
+    "STREAMS", "Telemetry", "collect_diagnostics", "concat_streams",
+    "materialize", "summarize",
+    "Timing", "timeit",
+]

@@ -1,0 +1,67 @@
+"""The one benchmark-timing helper: warmup, ``perf_counter``, blocking.
+
+Every benchmark in this repo measures jax code, and jax dispatch is
+asynchronous — ``time.time()`` around an unblocked call times the
+*dispatch*, not the work.  ``timeit`` bakes in the whole discipline the
+benchmarks previously each half-implemented:
+
+- explicit warmup calls first (compilation is not the measurement),
+- ``time.perf_counter`` (monotonic, high-resolution) around each call,
+- ``jax.block_until_ready`` on the call's result before the clock stops
+  (any pytree; non-array leaves are ignored).
+
+``benchmarks/common.py``, ``kernels_bench.py`` and ``hillclimb.py`` all
+route through here, so a timing-methodology fix lands once.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+
+
+class Timing(NamedTuple):
+    """One ``timeit`` measurement."""
+    #: fastest single call, seconds (the number to report: min-of-N is
+    #: the standard noise-robust statistic for hot-loop timings)
+    best_s: float
+    #: arithmetic mean over the timed calls, seconds
+    mean_s: float
+    #: every timed call, seconds, in order
+    times_s: Tuple[float, ...]
+    #: the last call's return value (already blocked on)
+    result: Any
+
+
+def timeit(fn: Callable, *args, repeats: int = 5, warmup: int = 1,
+           block: bool = True, **kwargs) -> Timing:
+    """Time ``fn(*args, **kwargs)`` with warmup and blocking discipline.
+
+    Runs ``warmup`` untimed calls (each blocked on, so compilation and
+    first-touch costs never leak into the measurement), then ``repeats``
+    timed calls; each timed call is bracketed by ``perf_counter`` and —
+    when ``block`` — waits on ``jax.block_until_ready(result)`` before
+    the clock stops.  Returns a :class:`Timing`.
+
+    ``block=False`` is for host-only callables (file IO, pure numpy)
+    where there is nothing to wait on.
+    """
+    if repeats < 1:
+        raise ValueError(f"repeats must be >= 1, got {repeats}")
+    if warmup < 0:
+        raise ValueError(f"warmup must be >= 0, got {warmup}")
+    result = None
+    for _ in range(warmup):
+        result = fn(*args, **kwargs)
+        if block:
+            jax.block_until_ready(result)
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        result = fn(*args, **kwargs)
+        if block:
+            jax.block_until_ready(result)
+        times.append(time.perf_counter() - t0)
+    return Timing(best_s=min(times), mean_s=sum(times) / len(times),
+                  times_s=tuple(times), result=result)

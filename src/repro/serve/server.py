@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import spans as obs_spans
 from repro.serve.model import PredictModel, gemm_rows, row_bucket
 
 
@@ -229,31 +230,32 @@ class PredictServer:
     def _run_batch(self, batch: List[_Request]) -> None:
         """One padded-bucket GEMM for the whole batch, on the next
         device in the rotation; slice every request back out."""
-        with self._cond:
-            placed = self._placed
-        X = np.concatenate([r.rows for r in batch], axis=0)
-        n = X.shape[0]
-        bucket = row_bucket(n)
-        Xp = np.zeros((bucket, X.shape[1]), np.float32)
-        Xp[:n] = X
-        idx = self._rr % len(self._devices)
-        self._rr += 1
-        dev = self._devices[idx]
-        Wf, bf = placed[idx]
-        G = np.asarray(gemm_rows(Wf, bf, jax.device_put(Xp, dev)))
-        now = time.perf_counter()
-        off = 0
-        for req in batch:
-            k = req.rows.shape[0]
-            out = G[off: off + k, req.vt]
-            off += k
-            req.future.set_result(out[0] if req.scalar else out)
-        with self._cond:
-            self._lat.extend((now - r.t0) * 1e3 for r in batch)
-            self._rows += n
-            self._padded_rows += bucket - n
-            self._batches += 1
-            self._t_last = now
+        with obs_spans.span("serve_batch", requests=len(batch)):
+            with self._cond:
+                placed = self._placed
+            X = np.concatenate([r.rows for r in batch], axis=0)
+            n = X.shape[0]
+            bucket = row_bucket(n)
+            Xp = np.zeros((bucket, X.shape[1]), np.float32)
+            Xp[:n] = X
+            idx = self._rr % len(self._devices)
+            self._rr += 1
+            dev = self._devices[idx]
+            Wf, bf = placed[idx]
+            G = np.asarray(gemm_rows(Wf, bf, jax.device_put(Xp, dev)))
+            now = time.perf_counter()
+            off = 0
+            for req in batch:
+                k = req.rows.shape[0]
+                out = G[off: off + k, req.vt]
+                off += k
+                req.future.set_result(out[0] if req.scalar else out)
+            with self._cond:
+                self._lat.extend((now - r.t0) * 1e3 for r in batch)
+                self._rows += n
+                self._padded_rows += bucket - n
+                self._batches += 1
+                self._t_last = now
 
 
 def serve_model(model: PredictModel, **kw) -> PredictServer:

@@ -19,6 +19,10 @@ version  contents
          state + byte series, history blocks) and ``event_log`` records
          (``init`` / ``add_task`` / ``drop_task`` / ``set_active`` /
          ``set_coupling`` / ``run``).
+2        adds the ``obs`` block to ``online_session`` snapshots: the
+         accumulated device-side telemetry streams
+         (``OnlineSession.telemetry_``), or None when telemetry was off.
+         ``event_log`` records are unchanged.
 =======  ==================================================================
 
 Writing a migration
@@ -42,7 +46,7 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2
 
 # from-version -> upgrader(tree) -> tree (with schema_version bumped)
 _MIGRATIONS: Dict[int, Callable[[dict], dict]] = {}
@@ -63,6 +67,18 @@ def register_migration(from_version: int):
         _MIGRATIONS[int(from_version)] = fn
         return fn
     return deco
+
+
+@register_migration(1)
+def _v1_to_v2(tree: dict) -> dict:
+    """v1 -> v2: ``online_session`` snapshots gain the ``obs`` block
+    (accumulated telemetry streams).  Pre-obs sessions carry None —
+    exactly a fresh session that never ran with telemetry on.  Event
+    logs pass through untouched (they flow through the same chain)."""
+    if tree.get("kind") == "online_session":
+        tree.setdefault("obs", None)
+    tree["schema_version"] = 2
+    return tree
 
 
 def migrate(tree: Any) -> dict:

@@ -44,6 +44,7 @@ from repro.engine import plan as engine_plan
 from repro.net import fabric as fabric_lib
 from repro.net import meter as meter_lib
 from repro.net.policies import NetConfig
+from repro.obs import spans as obs_spans
 from repro.store import schema
 
 
@@ -51,6 +52,11 @@ def snapshot_session(sess: OnlineSession) -> dict:
     """The session as a plain, versioned pytree (see module docstring
     for the stored/rebuilt split).  Serialize it with
     ``repro.checkpoint.save`` or hand it to a ``SessionStore``."""
+    with obs_spans.span("store_snapshot", iteration=int(sess.iteration)):
+        return _snapshot_session(sess)
+
+
+def _snapshot_session(sess: OnlineSession) -> dict:
     state = None
     if sess.state is not None:
         state = {"r": sess.state.r, "alpha": sess.state.alpha,
@@ -68,6 +74,10 @@ def snapshot_session(sess: OnlineSession) -> dict:
     test = None
     if sess._test is not None:
         test = {"X": sess._test[0], "y": sess._test[1]}
+    obs = None
+    if sess.telemetry_ is not None:
+        obs = {"telemetry": {k: np.asarray(v, np.float32)
+                             for k, v in sess.telemetry_.items()}}
     return schema.stamp("online_session", {
         "config": sess.config.to_dict(),
         "data": {"X": sess._X, "y": sess._y, "mask": sess._mask,
@@ -82,6 +92,7 @@ def snapshot_session(sess: OnlineSession) -> dict:
         "history": [np.asarray(h) for h in sess.history],
         "plan": plan,
         "net": net,
+        "obs": obs,
     })
 
 
@@ -111,6 +122,12 @@ def restore_session(tree: Any, *, check_fingerprint: bool = True
     message stream — including the round-keyed drop stream — continues
     exactly where it stopped.
     """
+    with obs_spans.span("store_restore"):
+        return _restore_session(tree, check_fingerprint=check_fingerprint)
+
+
+def _restore_session(tree: Any, *, check_fingerprint: bool
+                     ) -> OnlineSession:
     tree = schema.migrate(tree)
     if tree.get("kind") != "online_session":
         raise schema.SchemaError(
@@ -165,6 +182,13 @@ def restore_session(tree: Any, *, check_fingerprint: bool = True
         sess.net_report_ = meter_lib.report(
             fab, sess._net_state, rounds=sess.iteration,
             bytes_per_round=np.asarray(sess._net_series))
+
+    obs = tree.get("obs")
+    if obs is not None:
+        # np.asarray with pinned dtype, not jnp: telemetry streams are
+        # host-side diagnostics, and x32 must not rewrite them
+        sess.telemetry_ = {k: np.asarray(v, np.float32)
+                           for k, v in obs["telemetry"].items()}
     return sess
 
 

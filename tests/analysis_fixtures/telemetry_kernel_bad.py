@@ -1,0 +1,10 @@
+"""BAD: telemetry-read-in-kernel — obs reads inside the kernel package."""
+import jax.numpy as jnp
+
+from repro.obs import telemetry
+
+
+def fused_step(K, q, lam, hi, prob, prev):
+    lam = jnp.clip(lam + q - K @ lam, 0.0, hi)
+    tel = telemetry.collect_diagnostics(prob, hi, lam, prev)
+    return lam, tel

@@ -1,0 +1,7 @@
+"""GOOD: the kernel stays observation-free — it returns arrays only;
+diagnostics are computed by the engine step as extra scan outputs."""
+import jax.numpy as jnp
+
+
+def fused_step(K, q, lam, hi):
+    return jnp.clip(lam + q - K @ lam, 0.0, hi)

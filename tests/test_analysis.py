@@ -33,12 +33,14 @@ BAD_EXPECT = {
     "raw-einsum-in-plan": ("raw_einsum_bad.py", [7]),
     "untiled-gram-call": ("untiled_gram_bad.py", [7]),
     "env-dependent-dtype": ("env_dtype_bad.py", [7, 11]),
+    "telemetry-read-in-kernel": ("telemetry_kernel_bad.py", [4, 9]),
 }
 
 GOOD_FIXTURES = [
     "scalar_closure_good.py", "silent_downcast_good.py",
     "host_sync_good.py", "raw_einsum_good.py",
     "untiled_gram_good.py", "env_dtype_good.py",
+    "telemetry_kernel_good.py",
 ]
 
 
@@ -149,6 +151,9 @@ def test_rule_path_scoping():
     assert not env.applies("dist/compat.py")           # the blessed shim
     down = rules.get_rule("silent-downcast")
     assert down.applies("store/session_store.py")
+    tel = rules.get_rule("telemetry-read-in-kernel")
+    assert tel.applies("kernels/fused.py")
+    assert not tel.applies("engine/plan.py")     # the step MAY collect
 
 
 def test_src_tree_has_no_unsuppressed_findings():

@@ -21,6 +21,11 @@ import repro.api.evaluate
 import repro.api.session
 import repro.api.solvers
 import repro.api.sweep
+import repro.obs
+import repro.obs.registry
+import repro.obs.spans
+import repro.obs.telemetry
+import repro.obs.timing
 import repro.serve.model
 import repro.serve.server
 import repro.store.events
@@ -44,6 +49,11 @@ MODULES = [
     repro.api.session,
     repro.api.solvers,
     repro.api.sweep,
+    repro.obs,
+    repro.obs.registry,
+    repro.obs.spans,
+    repro.obs.telemetry,
+    repro.obs.timing,
     repro.serve.model,
     repro.serve.server,
     repro.store.events,
