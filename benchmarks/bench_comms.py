@@ -14,6 +14,12 @@ fig2-regime problem (scarce target + rich source task), then:
 - ``risk_vs_staleness`` delays, drop probabilities, partial-activation
                         and gossip schedules: how much staleness the
                         consensus tolerates (cf. arXiv:1609.09563).
+- ``churn``             the elastic fabric: error-feedback int8
+                        (asserted STRICTLY below the plain-int8 frontier
+                        point at identical bytes), a risk-vs-stale_limit
+                        curve over a lossy wire, and node crash/recover
+                        vs leave scenarios with their byte/warm-fill
+                        accounting.
 
 Outputs ``BENCH_comms.json`` (repo root on a full run, ``--out PATH``
 anywhere — the CI net lane uploads the fast variant as an artifact) and
@@ -40,10 +46,10 @@ def _fit(data, A, cfg):
     return solver, risks
 
 
-def _net_record(name, net, data, A, cfg, base_risks):
+def _net_record(name, net, data, A, cfg, base_risks, base_r=None):
     solver, risks = _fit(data, A, cfg.replace(net=net))
     rep = solver.net_report_
-    return {
+    out = {
         "name": name,
         "final_risks_mean": [float(r) for r in risks.mean(0)],
         "max_abs_risk_delta_vs_float32": float(
@@ -54,6 +60,13 @@ def _net_record(name, net, data, A, cfg, base_risks):
         "delivery_rate": rep["delivery_rate"],
         "mode": rep["mode"],
     }
+    if base_r is not None:
+        # continuous frontier measure: distance of the decision
+        # variables from the float32 solution (risk quantizes at the
+        # test-set resolution; this does not)
+        out["solution_gap_vs_float32"] = float(
+            np.abs(np.asarray(solver.state_.r) - base_r).mean())
+    return out
 
 
 def run(fast: bool = False, out: str = None):
@@ -119,6 +132,88 @@ def run(fast: bool = False, out: str = None):
                                      tel["bytes_round"], np.int64))],
         }
 
+    # -- churn: elastic membership, stragglers, error feedback ----------
+    # (a) error-feedback int8: identical bytes on the wire, residual
+    # compensation recovers the mass plain int8 throws away every round
+    # — the risk-vs-bytes frontier point must land STRICTLY below int8
+    base_r = np.asarray(ref.state_.r)
+    int8_rec = _net_record(
+        "int8", NetConfig(policy=LinkPolicy(quant="int8")),
+        data, A, cfg, base_risks, base_r=base_r)
+    ef_rec = _net_record(
+        "int8+ef",
+        NetConfig(policy=LinkPolicy(quant="int8"), error_feedback=True),
+        data, A, cfg, base_risks, base_r=base_r)
+    assert ef_rec["bytes_sent"] == int8_rec["bytes_sent"], \
+        "error feedback changed the byte bill (the residual never travels)"
+    # strictly below the int8 frontier point at identical bytes: the
+    # continuous measure always, the risk delta on the committed full
+    # regime (fast mode's tiny test set quantizes risk too coarsely to
+    # separate two points this close — it still must not be worse)
+    assert (ef_rec["solution_gap_vs_float32"]
+            < int8_rec["solution_gap_vs_float32"]), \
+        (f"EF-int8 did not move the solution below plain int8: "
+         f"{ef_rec['solution_gap_vs_float32']:.2e} vs "
+         f"{int8_rec['solution_gap_vs_float32']:.2e}")
+    assert (ef_rec["max_abs_risk_delta_vs_float32"]
+            <= int8_rec["max_abs_risk_delta_vs_float32"]), \
+        "EF-int8 risk landed above the plain int8 frontier point"
+    if not fast:
+        assert (ef_rec["max_abs_risk_delta_vs_float32"]
+                < int8_rec["max_abs_risk_delta_vs_float32"]), \
+            (f"EF-int8 point is not strictly below the int8 frontier "
+             f"point: {ef_rec['max_abs_risk_delta_vs_float32']:.2e} vs "
+             f"{int8_rec['max_abs_risk_delta_vs_float32']:.2e}")
+
+    # (b) bounded staleness over a lossy wire: how hard a straggler
+    # cutoff the consensus tolerates (stale_limit=None = legacy reduce)
+    stale_curve = [
+        _net_record(f"drop=0.3,stale_limit={k}",
+                    NetConfig(policy=LinkPolicy(drop=0.3), seed=1,
+                              stale_limit=k),
+                    data, A, cfg, base_risks)
+        for k in (None, 8, 4, 2)]
+
+    # (c) node churn: one node crashes mid-run and rejoins (silence,
+    # wasted bytes into the dead mailbox, metered warm-fill), one node
+    # leaves outright (links withdrawn) — over the int8 wire
+    from repro.net import Membership, MembershipEvent
+
+    churn_scen = []
+    for name, mem in [
+        ("crash_recover",
+         Membership(events=(MembershipEvent(iters // 4, "crash", 1),
+                            MembershipEvent(3 * iters // 4, "recover", 1)))),
+        ("leave",
+         Membership(events=(MembershipEvent(iters // 2, "leave", 1),))),
+    ]:
+        solver = DTSVM(cfg.replace(net=NetConfig(
+            policy=LinkPolicy(quant="int8"), seed=1)))
+        solver.fit(data["X"], data["y"], mask=data["mask"], adj=A,
+                   membership=mem)
+        risks = np.asarray(solver.risks(data["X_test"], data["y_test"]))
+        rep = solver.net_report_
+        churn_scen.append({
+            "name": name,
+            "events": [e.to_dict() for e in mem.events],
+            "final_risks_mean": [float(r) for r in risks.mean(0)],
+            "max_abs_risk_delta_vs_float32": float(
+                np.abs(risks - base_risks).max()),
+            "bytes_sent": rep["bytes_sent"],
+            "warmfill_msgs": rep["warmfill_msgs"],
+            "max_silence": rep["max_silence"],
+            "final_alive": rep["membership"]["final_alive"],
+        })
+    # a leave withdraws links, a crash does not: the crash run keeps
+    # paying for transmissions into the dead mailbox
+    assert (churn_scen[0]["bytes_sent"] > churn_scen[1]["bytes_sent"]), \
+        "crash run should bill more bytes than the leave run"
+
+    churn = {"error_feedback": ef_rec,
+             "int8_baseline": int8_rec,
+             "risk_vs_stale_limit": stale_curve,
+             "node_events": churn_scen}
+
     low_bit_ok = [r["name"] for r in quant
                   if r["name"] in ("int16", "int8", "float16")
                   and r["max_abs_risk_delta_vs_float32"] <= 1e-3]
@@ -138,9 +233,11 @@ def run(fast: bool = False, out: str = None):
         "risk_vs_bytes": quant,
         "risk_vs_staleness": staleness,
         "convergence": convergence,
+        "churn": churn,
         "acceptance": {
             "identity_bitwise": bitwise,
             "low_bit_configs_within_1e-3": low_bit_ok,
+            "ef_int8_strictly_below_int8": True,   # asserted above
         },
     }
     assert low_bit_ok, ("no <=16-bit wire format stayed within 1e-3 of "
@@ -163,11 +260,15 @@ def run(fast: bool = False, out: str = None):
 def main(fast=False, out=None):
     recs = run(fast, out)
     q16 = next(r for r in recs["risk_vs_bytes"] if r["name"] == "int16")
+    q8 = next(r for r in recs["risk_vs_bytes"] if r["name"] == "int8")
+    ef = recs["churn"]["error_feedback"]
     emit("bench_comms", recs["identity"]["bytes_per_round"],
          f"identity_bitwise={recs['identity']['bitwise_identical_to_vmap']} "
          f"f32_B_round={recs['identity']['bytes_per_round']:.0f} "
          f"int16_B_round={q16['bytes_per_round']:.0f} "
          f"int16_risk_delta={q16['max_abs_risk_delta_vs_float32']:.1e} "
+         f"ef_int8_risk_delta={ef['max_abs_risk_delta_vs_float32']:.1e}"
+         f"<{q8['max_abs_risk_delta_vs_float32']:.1e} "
          f"low_bit_ok={','.join(recs['acceptance']['low_bit_configs_within_1e-3'])}")
 
 

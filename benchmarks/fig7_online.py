@@ -99,6 +99,74 @@ def stage_marks(stage_iters, *, seed=0, n_test=1800, qp_iters=100):
     return marks, rows
 
 
+def churn_marks(stage_iters, *, seed=0, n_test=1800, qp_iters=100):
+    """The online protocol under NODE churn: same five coupling stages,
+    but over a lossy async fabric (int8 wire + error feedback, bounded
+    staleness) with one node crashing mid-coupling, recovering a stage
+    later, and another leaving for good.  Node events go through the
+    same EventLog as the task events and the whole run is replay-audited
+    — crash/recover is certified reproducible from the log alone.
+
+    Returns (per-stage final (T,) global risks, per-iteration CSV rows).
+    """
+    from repro.net import LinkPolicy, NetConfig
+
+    V, T = 6, 3
+    n_train = np.zeros((V, T), int)
+    n_train[:, 0] = 10
+    n_train[:, 1] = 10
+    n_train[:, 2] = 40
+    data = synthetic.make_multitask_data(
+        V=V, T=T, p=10, n_train=n_train, n_test=n_test, relatedness=0.9,
+        noise=1.0, seed=seed)
+
+    net = NetConfig(policy=LinkPolicy(drop=0.1, quant="int8"),
+                    schedule="partial:0.9", seed=seed,
+                    stale_limit=3, error_feedback=True)
+    log = EventLog()
+    sess = OnlineSession(
+        data["X"], data["y"], mask=data["mask"], adj=graph_lib.full(V),
+        config=SolverConfig(C=0.01, eps1=1.0, eps2=100.0,
+                            qp_iters=qp_iters, net=net),
+        X_test=data["X_test"], y_test=data["y_test"],
+        couple=np.zeros(V, np.float32), log=log)
+
+    def act(tasks):
+        a = np.zeros((V, T), np.float32)
+        for t in tasks:
+            a[:, t] = 1.0
+        return a
+
+    # (name, active tasks, couple on?, node event) per stage: node 3
+    # crashes while Task 1 couples, comes back for Task 2's stage, and
+    # node 5 leaves for the final solo stage
+    stages = [
+        ("s1_independent", act([0, 1, 2]), False, None),
+        ("s2_t1_with_t3", act([0, 2]), True, ("crash", 3)),
+        ("s3_t1_leaves", act([1, 2]), False, None),
+        ("s4_t2_with_t3", act([1, 2]), True, ("recover", 3)),
+        ("s5_t2_leaves", act([2]), False, ("leave", 5)),
+    ]
+
+    rows, marks = [], {}
+    it = 0
+    for name, active, couple, event in stages:
+        sess.set_active(active).set_coupling(couple)
+        if event is not None:
+            kind, node = event
+            getattr(sess, f"node_{kind}")(node)
+        hist = sess.run(stage_iters)
+        h = hist.mean(1)                   # (iters, T) global risks
+        for i in range(stage_iters):
+            rows.append([name, it + i, h[i, 0], h[i, 1], h[i, 2]])
+        it += stage_iters
+        marks[name] = h[-1]
+    _assert_replay_matches(sess, log)
+    alive = np.asarray(sess.node_status["alive"]).tolist()
+    assert alive == [True, True, True, True, True, False], alive
+    return marks, rows
+
+
 def run(fast: bool = False, seed=0):
     stage_iters = 15 if fast else 30
     marks, rows = stage_marks(stage_iters, seed=seed)

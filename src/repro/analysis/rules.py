@@ -69,6 +69,7 @@ def _functions_by_name(mod: SourceModule
 HOT_ROOTS = frozenset({
     "plan_step", "consensus_update", "dtsvm_step", "_fabric_step",
     "gemm_rows", "reduce", "exchange", "_per_edge_quant",
+    "apply_membership",
     "solve_fista", "solve_pg", "solve_pallas_fused",
     "solve_pallas_fused_multi", "solve_factored_multi",
     "solve_box_qp_pg", "solve_box_qp_fista",

@@ -213,7 +213,8 @@ def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
                net=None, plan: Optional[engine_plan.Plan] = None,
                fabric=None, fabric_state=None, round0: int = 0,
                meter_out: Optional[dict] = None, budget=None,
-               telemetry=None, telemetry_out: Optional[dict] = None):
+               telemetry=None, telemetry_out: Optional[dict] = None,
+               membership=None):
     """The communication fabric (``repro.net``): the same compiled plan
     stepped against per-node mailboxes behind lossy/delayed/quantized
     links, with byte metering.  ``net`` is a ``repro.net.NetConfig``;
@@ -221,7 +222,8 @@ def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
     state; ``budget`` streams the plan's K build when no prebuilt
     ``plan`` is passed; ``telemetry`` / ``telemetry_out`` collect the
     per-round convergence streams (plus ``bytes_round``) from the same
-    scan.
+    scan; ``membership`` (a ``repro.net.Membership``) schedules node
+    enter/leave/crash/recover events over the run (docs/churn.md).
     """
     if plan is not None and (plan.prob is not prob
                              or plan.qp_iters != qp_iters
@@ -233,7 +235,7 @@ def _run_async(prob: core.DTSVMProblem, iters: int, *, qp_iters: int = 200,
         prob, iters, net=net, plan=plan, fabric=fabric,
         fabric_state=fabric_state, qp_iters=qp_iters, qp_solver=qp_solver,
         state=state, eval_fn=eval_fn, round0=round0, budget=budget,
-        telemetry=telemetry)
+        telemetry=telemetry, membership=membership)
     if meter_out is not None:
         meter_out["report"] = res.report
         meter_out["fabric"] = res.fabric

@@ -43,6 +43,17 @@ story), metered separately as ``warmfill_msgs``.  The identity
 NetConfig reproduces the vmap session bitwise, stage for stage
 (tested); ``net_report_`` holds the cumulative byte accounting.
 
+The NODE set is elastic too (``repro.net.elastic``; docs/churn.md):
+``node_enter`` / ``node_leave`` / ``node_crash`` / ``node_recover``
+schedule membership events at the session's current absolute round —
+a dead node freezes and publishes nothing, a graceful leaver's
+mailbox columns are garbage-collected, a joiner/recoverer warm-fills,
+and ``node_recover(v, from_state=restored.state)`` grafts the node's
+rows from a durable ``repro.store`` snapshot (the crash-recovery
+story).  Event emission is continuation-safe, so a churn session
+split across stages — or saved and restored mid-stream — stays
+bitwise one long run.
+
 Sessions are durable (``repro.store``): ``SessionStore.save`` snapshots
 the whole thing — state, masks, plan fingerprint, live fabric — and the
 restored session continues bitwise; ``OnlineSession(..., log=EventLog())``
@@ -108,6 +119,10 @@ class OnlineSession:
         self.history = []            # one (iters, V, T) risk block per run()
         self._plan: Optional[engine_plan.Plan] = None
         self._masks_dirty = False    # membership changed since last plan
+        # node-level membership (repro.net.elastic): the absolute-round
+        # event list is continuation-safe — every run passes the WHOLE
+        # list and the fabric replays past events into its start status
+        self._node_events = []
         # fabric-aware (async backend) bookkeeping: live mailboxes/delay
         # rings/counters and the absolute round of the message stream
         self._net_fabric = None
@@ -201,6 +216,89 @@ class OnlineSession:
         return self
 
     # ------------------------------------------------------------------
+    # node-level membership (repro.net.elastic)
+    # ------------------------------------------------------------------
+    def _membership(self):
+        from repro.net import elastic
+        if not self._node_events:
+            return None
+        return elastic.Membership(events=tuple(self._node_events))
+
+    def _node_event(self, kind: str, node: int) -> None:
+        if self._effective_backend() != "async":
+            raise ValueError(
+                "node membership events are a fabric feature — configure "
+                "a communication model (SolverConfig(net=NetConfig(...))) "
+                "or backend='async' first")
+        from repro.net import elastic
+        self._node_events.append(elastic.MembershipEvent(
+            round=self.iteration, kind=kind, node=int(node)))
+        # a buffer-mode (identity fast path) fabric has no per-receiver
+        # mailboxes to GC/fill: drop it so the next run rebuilds in
+        # mailbox mode, warm from the current state (byte counters
+        # restart — churn sessions should start under a lossy/explicit
+        # mailbox config when cumulative accounting matters)
+        if self._net_fabric is not None and self._net_fabric.mode == "buffer":
+            self._net_fabric = None
+            self._net_state = None
+
+    def node_enter(self, node: int) -> "OnlineSession":
+        """A NEW node joins the live network at the current round: it
+        starts computing and its incident mailboxes warm-fill (metered
+        as ``warmfill_msgs``).  Idempotent on an already-live node."""
+        self._node_event("enter", node)
+        self._emit("node_enter", node=int(node))
+        return self
+
+    def node_leave(self, node: int) -> "OnlineSession":
+        """A GRACEFUL departure: neighbors withdraw the node's links and
+        garbage-collect its mailbox contributions immediately."""
+        self._node_event("leave", node)
+        self._emit("node_leave", node=int(node))
+        return self
+
+    def node_crash(self, node: int) -> "OnlineSession":
+        """An ABRUPT death: neighbors don't know — they keep spending
+        bytes into its mailbox and its stale values linger until the
+        bounded-staleness policy (``NetConfig.stale_limit``) ages them
+        out."""
+        self._node_event("crash", node)
+        self._emit("node_crash", node=int(node))
+        return self
+
+    def node_recover(self, node: int, from_state: Optional[
+            core.DTSVMState] = None) -> "OnlineSession":
+        """The crashed node rejoins; its incident mailboxes warm-fill
+        like an enter.  ``from_state`` (e.g. the ``.state`` of a session
+        restored from a ``repro.store`` snapshot) grafts that state's
+        row ``node`` over the local one — the crash-recovery story: the
+        node restarts from its last durable checkpoint."""
+        if from_state is not None and self.state is None:
+            raise RuntimeError("run() the session before recovering "
+                               "a node from a snapshot state")
+        self._node_event("recover", node)
+        rows = None
+        if from_state is not None:
+            self.state = core.DTSVMState(*(
+                jnp.asarray(cur).at[node].set(jnp.asarray(src)[node])
+                for cur, src in zip(self.state, from_state)))
+            rows = {k: np.asarray(v[node])
+                    for k, v in zip(core.DTSVMState._fields, from_state)}
+        self._emit("node_recover", node=int(node), rows=rows)
+        return self
+
+    @property
+    def node_status(self) -> dict:
+        """Current per-node membership: ``{"alive": (V,) bool mask,
+        "events": [event dicts fired so far]}``."""
+        mem = self._membership()
+        alive = (np.ones(self.V, bool) if mem is None
+                 else mem.alive_at(self.V, self.iteration) > 0)
+        return {"alive": alive,
+                "events": [] if mem is None
+                else [e.to_dict() for e in mem.events]}
+
+    # ------------------------------------------------------------------
     # execution
     # ------------------------------------------------------------------
     def problem(self) -> core.DTSVMProblem:
@@ -258,6 +356,9 @@ class OnlineSession:
                   meter_out=out)
         if cfg.net is not None:
             kw["net"] = cfg.net
+        mem = self._membership()
+        if mem is not None:
+            kw["membership"] = mem
         return kw
 
     def run(self, iters: Optional[int] = None, *, record: bool = True):
@@ -336,6 +437,13 @@ class OnlineSession:
             self.net_report_ = meter.report(
                 self._net_fabric, self._net_state, rounds=self.iteration,
                 bytes_per_round=np.asarray(self._net_series))
+            mem = self._membership()
+            if mem is not None:
+                self.net_report_["membership"] = {
+                    "events": [e.to_dict() for e in mem.events],
+                    "final_alive": [float(a) for a in
+                                    mem.alive_at(self.V, self.iteration)],
+                }
         if hist is not None:
             self.history.append(np.asarray(hist))
         return None if hist is None else np.asarray(hist)

@@ -247,19 +247,29 @@ class _ConsensusSolver:
 
     def fit(self, X, y, mask=None, adj=None, *, active=None, couple=None,
             iters: Optional[int] = None, state: Optional[core.DTSVMState]
-            = None, eval_fn=None, X_test=None, y_test=None):
+            = None, eval_fn=None, X_test=None, y_test=None,
+            membership=None):
         """Run ADMM on (X, y).  Returns self; state/history are stored on
         ``state_`` / ``history_`` (and, with ``config.telemetry``, the
         per-iteration convergence streams on ``telemetry_``).  Passing
         ``state`` warm-starts (the online setting); ``X_test``/``y_test``
         record a per-iteration risk curve without any manual
-        broadcasting."""
+        broadcasting; ``membership`` (a ``repro.net.Membership``)
+        schedules node enter/leave/crash/recover events over the fit —
+        an async-backend feature (docs/churn.md)."""
         prob = self.make_problem(X, y, mask, adj, active=active,
                                  couple=couple)
         if eval_fn is None and X_test is not None:
             eval_fn = evaluate.risk_eval_fn(prob.X.shape[0], X_test, y_test)
         cfg = self.config
         backend, options = effective_backend(cfg), dict(cfg.backend_options)
+        if membership is not None:
+            if backend != "async":
+                raise ValueError(
+                    "membership= models node churn over the communication "
+                    "fabric; configure SolverConfig(net=NetConfig(...)) "
+                    "or backend='async'")
+            options["membership"] = membership
         if cfg.net is not None:
             options.setdefault("net", cfg.net)
         if cfg.budget is not None:

@@ -19,28 +19,44 @@ or, one level up, through the solver surface:
 
     DTSVM(SolverConfig(net=net)).fit(X, y, mask=mask, adj=adj)
 
-The identity configuration (zero delay/drop, float32, trivial schedule)
-is BITWISE identical to ``backend="vmap"`` — the fabric generalizes the
-synchronous path, it does not fork it.  See API.md §net.
+The NODE set is elastic too: a ``Membership`` schedules enter / leave /
+crash / recover events over a static scan shape (``docs/churn.md``),
+``NetConfig.stale_limit`` bounds how long a silent neighbor keeps its
+seat in the consensus reduce, and ``NetConfig(error_feedback=True)``
+turns the integer wire formats into residual-accumulating compressors:
+
+    from repro.net import Membership, MembershipEvent
+    mem = Membership(events=(MembershipEvent(8, "crash", 2),
+                             MembershipEvent(20, "recover", 2)))
+    res = run_async(prob, iters=40, net=net, membership=mem)
+
+The identity configuration (zero delay/drop, float32, trivial schedule,
+no membership events) is BITWISE identical to ``backend="vmap"`` — the
+fabric generalizes the synchronous path, it does not fork it.  See
+API.md §net.
 """
 from repro.net.async_admm import AsyncResult, run_async
+from repro.net.elastic import Membership, MembershipEvent
 from repro.net.fabric import (Fabric, FabricState, build_fabric,
                               restore_state, snapshot_state)
 from repro.net.policies import (LinkPolicy, NetConfig, apply_quant,
                                 bytes_per_message)
 from repro.net.schedule import Schedule, resolve as resolve_schedule
-from repro.net import meter, policies, schedule
+from repro.net import elastic, meter, policies, schedule
 
 __all__ = [
     "AsyncResult",
     "Fabric",
     "FabricState",
     "LinkPolicy",
+    "Membership",
+    "MembershipEvent",
     "NetConfig",
     "Schedule",
     "apply_quant",
     "build_fabric",
     "bytes_per_message",
+    "elastic",
     "meter",
     "policies",
     "resolve_schedule",

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core import dtsvm as core
 from repro.engine import plan as engine_plan
+from repro.net import elastic as elastic_lib
 from repro.net import fabric as fabric_lib
 from repro.net import meter as meter_lib
 from repro.net import schedule as schedule_lib
@@ -103,7 +104,9 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
               qp_iters: int = 200, qp_solver: str = "fista",
               state: Optional[core.DTSVMState] = None,
               eval_fn: Optional[Callable] = None,
-              round0: int = 0, budget=None, telemetry=None) -> AsyncResult:
+              round0: int = 0, budget=None, telemetry=None,
+              membership: Optional[elastic_lib.Membership] = None
+              ) -> AsyncResult:
     """Run ``iters`` asynchronous rounds of Prop. 1 over the fabric.
 
     ``net`` declares the communication model (default: identity — the
@@ -116,11 +119,22 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
     ``fabric_state`` is None, starts the fabric's round counter there —
     a carried fabric_state keeps its own).
 
+    ``membership`` (a ``repro.net.elastic.Membership``) makes the NODE
+    set elastic: its alive mask multiplies the schedule's activations
+    (dead nodes freeze — the scan shape never changes), its gone mask
+    withdraws a graceful leaver's links, and its gc/fill masks fire the
+    fabric's mailbox maintenance on the event round
+    (``Fabric.apply_membership``).  A trivial membership (no events,
+    all alive) is exactly ``membership=None`` — the identity contract
+    is untouched.  Any real event forces mailbox mode.
+
     ``telemetry`` (a ``repro.obs.Telemetry``) collects per-round
     convergence diagnostics inside the same scan — extra scan outputs
     only, so the state/mailbox trajectory is bitwise the telemetry-None
     run — and folds the fabric's per-round byte counts in as a
-    ``bytes_round`` stream; the materialized dict lands on
+    ``bytes_round`` stream, the per-node staleness clock as
+    ``staleness`` (rounds, V), and (under a membership) the live-node
+    count as ``nodes_alive``; the materialized dict lands on
     ``AsyncResult.telemetry``.
     """
     net = net if net is not None else NetConfig()
@@ -132,29 +146,49 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
         state = core.init_state(prob)
     V = prob.X.shape[0]
 
+    mem = membership
+    if mem is not None and mem.is_trivial:
+        mem = None                       # identity: exactly no membership
     sched = schedule_lib.resolve(net.schedule, seed=net.seed)
     acts, links = sched.emit(V, iters, adj=np.asarray(prob.adj),
                              round0=round0)
+    mm = None
+    if mem is not None:
+        mm = mem.masks(V, iters, round0=round0)
+        acts = np.asarray(acts) * mm["alive"]
+        links = elastic_lib.combine_links(links, mm, np.asarray(prob.adj))
     acts = jnp.asarray(acts, jnp.float32)                  # (iters, V)
     has_links = links is not None
     if fabric is None:
         fabric = fabric_lib.build_fabric(prob, net,
                                          force_mailbox=has_links)
     elif has_links and fabric.mode == "buffer":
-        raise ValueError("a link-varying schedule needs a mailbox-mode "
-                         "fabric; build it with force_mailbox=True")
+        raise ValueError("a link-varying schedule (or membership with "
+                         "events) needs a mailbox-mode fabric; build it "
+                         "with force_mailbox=True")
     if fabric_state is None:
         payload0 = state.r * prob.active[..., None]
         fabric_state = fabric.init_state(payload0, round0=round0)
     task_counts = jnp.sum(prob.active, axis=1)             # (V,) live rows
 
-    xs = (acts, jnp.asarray(links) if has_links else jnp.zeros(
-        (iters, 1), bool))
+    xs = (acts,
+          jnp.asarray(links) if has_links else jnp.zeros(
+              (iters, 1), bool),
+          jnp.asarray(mm["gc"]) if mem is not None else jnp.zeros(
+              (iters, 1), bool),
+          jnp.asarray(mm["fill"]) if mem is not None else jnp.zeros(
+              (iters, 1), bool))
 
     def body(carry, x):
         st, fst = carry
-        act, lnk = x
+        act, lnk, gcm, film = x
         lnk = lnk if has_links else None
+        if mem is not None:
+            # membership maintenance fires BEFORE the round's exchange:
+            # GC a leaver's columns, warm-fill a joiner's edges from
+            # everyone's current (masked) decision variables
+            payload = st.r * plan.prob.active[..., None]
+            fst = fabric.apply_membership(fst, gcm, film, payload)
         new, fst, bytes_now = _fabric_step(plan, fabric, st, fst, act, lnk,
                                            task_counts)
         ev = eval_fn(new) if eval_fn is not None else jnp.float32(0)
@@ -162,16 +196,31 @@ def run_async(prob: core.DTSVMProblem, iters: int, *,
         # exactly the original outputs (bitwise contract)
         tel = (None if telemetry is None
                else telemetry.collect(plan.prob, plan.inv.hi, new, st))
-        return (new, fst), (ev, bytes_now, tel)
+        # per-node staleness: extra scan OUTPUT only — never in the
+        # carry, so the state/mailbox trajectory stays bitwise
+        stale = jnp.max(fst.silence, axis=1)
+        return (new, fst), (ev, bytes_now, stale, tel)
 
-    (state, fabric_state), (hist, bytes_rounds, tel_streams) = jax.lax.scan(
-        body, (state, fabric_state), xs, length=iters)
+    (state, fabric_state), (hist, bytes_rounds, stale_rounds, tel_streams) \
+        = jax.lax.scan(body, (state, fabric_state), xs, length=iters)
     report = meter_lib.report(fabric, fabric_state, rounds=iters,
                               bytes_per_round=bytes_rounds)
+    if mem is not None:
+        fired = elastic_lib.events_in(mem, iters, round0)
+        report["membership"] = {
+            "events": [e.to_dict() for e in fired],
+            "final_alive": ([] if iters == 0
+                            else [float(a) for a in mm["alive"][-1]]),
+            "epochs": len(mem.epochs(V, iters, round0=round0)),
+        }
     tel_out = None
     if telemetry is not None:
         tel_out = obs_telemetry.materialize(tel_streams)
         tel_out["bytes_round"] = np.asarray(bytes_rounds, np.float32)
+        tel_out["staleness"] = np.asarray(stale_rounds, np.float32)
+        if mem is not None:
+            tel_out["nodes_alive"] = mm["alive"].sum(axis=1).astype(
+                np.float32)
     return AsyncResult(state=state,
                        history=hist if eval_fn is not None else None,
                        fabric_state=fabric_state, report=report,

@@ -55,6 +55,11 @@ class FabricState(NamedTuple):
     msgs_sent: jnp.ndarray       # (V, V) f32 task-vectors charged [v, u]
     msgs_delivered: jnp.ndarray  # (V, V) f32 task-vectors delivered
     warmfill_msgs: jnp.ndarray   # () f32 bootstrap deliveries
+    silence: jnp.ndarray         # (V, V) int32 rounds since last delivery
+    ef_resid: jnp.ndarray        # (V,V,T,D) error-feedback residuals, or
+    #                              (1,1,1,1) zeros when EF is off (static
+    #                              per fabric config, so the scan
+    #                              structure never changes shape)
 
 
 class Fabric:
@@ -101,6 +106,18 @@ class Fabric:
         self._codes = sorted({int(c) for c in np.unique(qcode[adj])}
                              - {0}) if adj.any() else []
         self._vv = np.indices((V, V))              # static gather helpers
+        self.stale_limit = net.stale_limit
+        # error feedback compensates the SENDER-side quantizer, so the
+        # compressed values are per-edge at publish time — incompatible
+        # with the per-sender delay ring, which stores one raw payload
+        # per sender and quantizes at delivery
+        self.error_feedback = bool(net.error_feedback)
+        if self.error_feedback and self.hist_len > 1:
+            raise ValueError(
+                "error_feedback requires zero-delay links (the residual "
+                "compensates the sender's quantizer at publish time; a "
+                "delay ring would re-quantize the raw payload at "
+                "delivery) — set delay=0 or error_feedback=False")
 
     # ------------------------------------------------------------------
     # state construction
@@ -119,6 +136,8 @@ class Fabric:
         zero_box = (jnp.zeros((V, T, D), jnp.float32)
                     if self.mode == "buffer"
                     else jnp.zeros((V, V, T, D), jnp.float32))
+        ef_shape = ((V, V, T, D) if self.error_feedback
+                    and self.mode == "mailbox" else (1, 1, 1, 1))
         st = FabricState(
             mailbox=zero_box,
             pub_hist=jnp.zeros((self.hist_len, V, T, D), jnp.float32),
@@ -130,6 +149,8 @@ class Fabric:
             msgs_sent=jnp.zeros((V, V), jnp.float32),
             msgs_delivered=jnp.zeros((V, V), jnp.float32),
             warmfill_msgs=jnp.asarray(0.0, jnp.float32),
+            silence=jnp.zeros((V, V), jnp.int32),
+            ef_resid=jnp.zeros(ef_shape, jnp.float32),
         )
         if self.net.warm_fill:
             st = self.warm_fill(st, payload0)
@@ -157,12 +178,68 @@ class Fabric:
         n = jnp.sum(self.adjf) * jnp.sum(tcols)
         if self.mode == "buffer":
             box = jnp.where(tcols[None, :, None], payload, st.mailbox)
-        else:
-            vals = self._per_edge_quant(
-                jnp.broadcast_to(payload[None], (self.V,) + payload.shape))
-            sel = self.adj[:, :, None, None] & tcols[None, None, :, None]
-            box = jnp.where(sel, vals, st.mailbox)
-        return st._replace(mailbox=box, warmfill_msgs=st.warmfill_msgs + n)
+            return st._replace(mailbox=box,
+                               warmfill_msgs=st.warmfill_msgs + n)
+        vals = self._per_edge_quant(
+            jnp.broadcast_to(payload[None], (self.V,) + payload.shape))
+        sel = self.adj[:, :, None, None] & tcols[None, None, :, None]
+        box = jnp.where(sel, vals, st.mailbox)
+        # an out-of-band delivery crossed every consensus edge — the
+        # bounded-staleness clock restarts (values-invisible when no
+        # stale_limit is set)
+        silence = jnp.where(self.adj, 0, st.silence)
+        return st._replace(mailbox=box, silence=silence,
+                           warmfill_msgs=st.warmfill_msgs + n)
+
+    def apply_membership(self, st: FabricState, gc: jnp.ndarray,
+                         fill: jnp.ndarray, payload: jnp.ndarray
+                         ) -> FabricState:
+        """Node-level membership maintenance on a mailbox fabric.
+
+        ``gc`` (V,) bool marks nodes leaving GRACEFULLY this round:
+        their contributions are garbage-collected — every receiver's
+        mailbox column from that sender zeroes out and any in-flight
+        ring entries are cancelled.  (A *crash* performs no GC: the
+        stale values linger until the bounded-staleness policy ages
+        them out — that asymmetry is the whole difference between the
+        two failure modes.)
+
+        ``fill`` (V,) bool marks nodes (re)joining this round: every
+        consensus edge incident to such a node warm-fills from
+        ``payload`` (V, T, D) — the rejoiner's mailboxes from its
+        neighbors' current variables AND the neighbors' mailboxes from
+        the rejoiner's — quantized per edge like any other message,
+        metered in ``warmfill_msgs`` (units: task-vectors, T per
+        touched edge), with the staleness clock reset on those edges.
+
+        Traceable with static shapes (the masks are data, never
+        structure): an all-false round is a value-level no-op, so the
+        async scan applies this every round without re-tracing.
+        """
+        if self.mode == "buffer":
+            raise ValueError("membership events need a mailbox-mode "
+                             "fabric; build it with force_mailbox=True")
+        gc = jnp.asarray(gc, bool)
+        fill = jnp.asarray(fill, bool)
+        payload = jnp.asarray(payload, jnp.float32)
+        T = payload.shape[1]
+        # -- GC: zero the leaver's columns + cancel in-flight sends ----
+        box = jnp.where(gc[None, :, None, None], 0.0, st.mailbox)
+        ok_hist = st.ok_hist & ~gc[None, None, :]
+        ef_resid = st.ef_resid
+        if self.error_feedback:
+            # the leaver's quantizer state dies with its link
+            ef_resid = jnp.where(gc[None, :, None, None], 0.0, ef_resid)
+        # -- warm-fill: both directions of every edge touching a joiner
+        touched = self.adj & (fill[:, None] | fill[None, :])
+        vals = self._per_edge_quant(
+            jnp.broadcast_to(payload[None], (self.V,) + payload.shape))
+        box = jnp.where(touched[:, :, None, None], vals, box)
+        silence = jnp.where(touched, 0, st.silence)
+        n = jnp.sum(touched.astype(jnp.float32)) * T
+        return st._replace(mailbox=box, ok_hist=ok_hist,
+                           ef_resid=ef_resid, silence=silence,
+                           warmfill_msgs=st.warmfill_msgs + n)
 
     # ------------------------------------------------------------------
     # the per-round exchange
@@ -243,8 +320,25 @@ class Fabric:
         vv, uu = self._vv
         delivered = ok_hist[slots, vv, uu] & (k >= self.delay_m)
         raw = pub_hist[slots, uu]                               # (V,V,T,D)
-        vals = self._per_edge_quant(raw)
+        ef_resid = st.ef_resid
+        if self.error_feedback:
+            # residual-compensated quantization: send Q(x + e), then
+            # e <- (x + e) - Q(x + e).  The residual advances wherever
+            # the sender produced a message (``attempt``) — transit loss
+            # is invisible to the sender, so a dropped message's error
+            # still feeds the next send.  Wire bytes are UNCHANGED.
+            inp = raw + ef_resid
+            vals = self._per_edge_quant(inp)
+            ef_resid = jnp.where(attempt[:, :, None, None],
+                                 inp - vals, ef_resid)
+        else:
+            vals = self._per_edge_quant(raw)
         box = jnp.where(delivered[:, :, None, None], vals, st.mailbox)
+        # bounded-staleness clock: per-edge rounds since last delivery
+        # (values-invisible unless a stale_limit gates the reduce)
+        silence = jnp.where(self.adj,
+                            jnp.where(delivered, 0, st.silence + 1),
+                            st.silence)
 
         bytes_now = jnp.sum(jnp.where(attempt, cost, 0.0))
         return st._replace(
@@ -258,6 +352,8 @@ class Fabric:
             msgs_delivered=(st.msgs_delivered
                             + delivered.astype(jnp.float32)
                             * tc_hist[slots, uu]),
+            silence=silence,
+            ef_resid=ef_resid,
         ), bytes_now
 
     # ------------------------------------------------------------------
@@ -269,10 +365,20 @@ class Fabric:
         Buffer mode is the EXACT expression of the synchronous backend
         (``core.dtsvm._default_nbr_reduce``) over the shared buffer —
         the keystone of the bitwise-identity guarantee.
+
+        With a ``stale_limit`` K (mailbox mode), a neighbor whose edge
+        has been silent for MORE than K consecutive rounds is dropped
+        from the sum — the bounded-staleness straggler policy: its last
+        value is too old to average in, so the receiver proceeds
+        without it until the edge delivers again.
         """
         if self.mode == "buffer":
             # repro: noqa[raw-einsum-in-plan] — deliberate: must be the EXACT expression of core._default_nbr_reduce (the bitwise-identity keystone); tests pin async == sync
             return jnp.einsum("vu,utd->vtd", self.adjf, st.mailbox)
+        if self.stale_limit is not None:
+            fresh = (st.silence <= self.stale_limit).astype(jnp.float32)
+            return jnp.sum((self.adjf * fresh)[:, :, None, None]
+                           * st.mailbox, axis=1)
         return jnp.sum(self.adjf[:, :, None, None] * st.mailbox, axis=1)
 
 
@@ -313,9 +419,10 @@ def restore_state(tree) -> FabricState:
             f"(repro.store.schema) before restoring")
     # dtypes pinned per field — a bare jnp.asarray would silently
     # downcast 64-bit leaves under x32 (the PR-6 bug class), and the
-    # round counter / ok ring must come back as int32 / bool even from
-    # a widened decode
-    dtypes = {"round": jnp.int32, "ok_hist": jnp.bool_}
+    # round counter / ok ring / staleness clock must come back as
+    # int32 / bool / int32 even from a widened decode
+    dtypes = {"round": jnp.int32, "ok_hist": jnp.bool_,
+              "silence": jnp.int32}
     kw = {k: jnp.asarray(v, dtypes.get(k, jnp.float32))
           for k, v in tree.items()}
     return FabricState(**kw)

@@ -12,10 +12,14 @@ counters into a serializable report:
     msgs_delivered    task-vector counts; their gap is in-transit loss
                       plus anything still in the delay rings
     delivery_rate     delivered / sent (1.0 on a perfect fabric)
-    warmfill_msgs     out-of-band bootstrap deliveries (mailbox priming
-                      and Fig.-7 task-entry refreshes), kept OUT of the
-                      per-round totals
+    warmfill_msgs     out-of-band bootstrap deliveries (mailbox priming,
+                      Fig.-7 task-entry refreshes and node enter/recover
+                      warm-fills), kept OUT of the per-round totals
     bytes_per_message per-edge wire size of one task vector (min/max)
+    max_silence /
+    stale_edges       the straggler picture at run end: the oldest
+                      edge-silence clock, and how many edges sit past
+                      the ``stale_limit`` (frozen out of the reduce)
 
 Everything is plain python floats/lists — json.dump-ready, so
 ``benchmarks/bench_comms.py`` can commit the numbers directly.
@@ -54,6 +58,14 @@ def report(fabric, fstate, *, rounds: int,
         "bytes_per_message_max": float(onwire.max()) if onwire.size else 0.0,
         "warmfill_msgs": float(np.asarray(fstate.warmfill_msgs)),
     }
+    silence = np.asarray(getattr(fstate, "silence", 0), np.float64)
+    adj = np.asarray(fabric.adj, bool)
+    on_edges = silence[adj] if silence.ndim == 2 else np.zeros(0)
+    rep["max_silence"] = float(on_edges.max()) if on_edges.size else 0.0
+    limit = getattr(fabric, "stale_limit", None)
+    rep["stale_limit"] = None if limit is None else int(limit)
+    rep["stale_edges"] = (0 if limit is None
+                          else int(np.count_nonzero(on_edges > limit)))
     if series is not None:
         rep["bytes_round_series"] = series.tolist()
         # the scan series counts the same bytes edge-wise accounting does

@@ -111,12 +111,31 @@ class NetConfig:
     with the senders' initial decision variables (one metered exchange)
     — the Fig.-7 joining-task semantics; without it mailboxes start at
     zero.
+
+    ``stale_limit`` is the bounded-staleness straggler policy: a
+    neighbor whose edge has been silent (nothing delivered) for MORE
+    than ``stale_limit`` consecutive rounds is dropped from the
+    consensus reduce until it delivers again (None = tolerate any
+    staleness — the PR-4 semantics).  ``error_feedback`` turns on
+    residual-accumulating compression on the integer wire formats: each
+    sender adds the previous round's quantization error to the payload
+    before quantizing (e ← (x+e) − Q(x+e)), so the quantization noise
+    averages out across rounds instead of biasing the consensus —
+    strictly better final risks at IDENTICAL bytes/round (asserted in
+    ``benchmarks/bench_comms.py``).
     """
     policy: LinkPolicy = field(default_factory=LinkPolicy)
     edge_policies: Optional[Mapping[Tuple[int, int], LinkPolicy]] = None
     schedule: Union[str, object] = "full"
     seed: int = 0
     warm_fill: bool = True
+    stale_limit: Optional[int] = None
+    error_feedback: bool = False
+
+    def __post_init__(self):
+        if self.stale_limit is not None and self.stale_limit < 0:
+            raise ValueError(
+                f"stale_limit must be >= 0 (or None), got {self.stale_limit}")
 
     def edge_policy(self, u: int, v: int) -> LinkPolicy:
         """The effective policy of the directed link u -> v."""
@@ -126,7 +145,10 @@ class NetConfig:
 
     @property
     def is_identity(self) -> bool:
-        """True when every link is a perfect synchronous float32 wire."""
+        """True when every link is a perfect synchronous float32 wire
+        and no staleness/compression policy is active."""
+        if self.stale_limit is not None or self.error_feedback:
+            return False
         if not self.policy.is_identity:
             return False
         return not self.edge_policies or all(
@@ -150,7 +172,10 @@ class NetConfig:
                      for (u, v), p in sorted(self.edge_policies.items())]
         return {"policy": self.policy.to_dict(), "edge_policies": edges,
                 "schedule": self.schedule, "seed": int(self.seed),
-                "warm_fill": bool(self.warm_fill)}
+                "warm_fill": bool(self.warm_fill),
+                "stale_limit": None if self.stale_limit is None
+                else int(self.stale_limit),
+                "error_feedback": bool(self.error_feedback)}
 
     @classmethod
     def from_dict(cls, d: dict) -> "NetConfig":
@@ -161,7 +186,11 @@ class NetConfig:
             edge_policies=None if edges is None else {
                 (u, v): LinkPolicy.from_dict(p) for u, v, p in edges},
             schedule=d["schedule"], seed=d["seed"],
-            warm_fill=d["warm_fill"])
+            warm_fill=d["warm_fill"],
+            # pre-v3 configs predate the churn fields; the defaults ARE
+            # their semantics (tolerate any staleness, plain quant)
+            stale_limit=d.get("stale_limit"),
+            error_feedback=d.get("error_feedback", False))
 
 
 # ---------------------------------------------------------------------------

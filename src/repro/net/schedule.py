@@ -18,6 +18,13 @@ and continuation-safe: ``emit(rounds, round0=k)`` returns exactly the
 rows ``[k, k+rounds)`` of the infinite schedule, so an OnlineSession
 resuming mid-stream sees the same sequence as one long run.
 
+Node-level membership (``repro.net.elastic``) composes ON TOP of a
+schedule, after emission: ``run_async`` multiplies ``acts`` by the
+membership's alive mask and intersects ``links`` through
+``elastic.combine_links`` — a schedule never needs to know that the
+node set is elastic, and the schedule stream (rng burn-in included)
+stays identical with or without membership events.
+
 Specs (``resolve``):
 
     "full"               everyone, every round (the synchronous default)

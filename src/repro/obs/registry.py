@@ -24,7 +24,10 @@ section        payload
 =============  =========================================================
 ``plan``       ``Plan.stats`` / ``OnlineSession.plan_stats`` — the
                gram-slices computed/reused/replans counters
-``net``        ``net.meter.report`` — bytes/messages/delivery per run
+``net``        ``net.meter.report`` — bytes/messages/delivery per run,
+               plus the straggler picture (``max_silence`` /
+               ``stale_edges``) and, on churn sessions, the
+               ``membership`` event summary
 ``serve``      ``PredictServer.stats()`` — p50/p99 latency, rps,
                rows/batch, pad_ratio
 ``telemetry``  ``obs.telemetry.summarize`` of the collected streams

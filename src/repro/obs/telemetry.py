@@ -39,8 +39,11 @@ stream                shape     meaning
 ====================  ========  =========================================
 
 The async backend folds the fabric's per-round byte counts in as a
-``bytes_round`` stream (from the same scan's outputs); ``net.meter``
-keeps the aggregate accounting.
+``bytes_round`` stream (from the same scan's outputs), the per-node
+edge-staleness clock as ``staleness`` ((rounds, V): each node's oldest
+incoming-edge silence, in rounds) and — under a node membership
+(``repro.net.elastic``) — the live-node count as ``nodes_alive``;
+``net.meter`` keeps the aggregate accounting.
 """
 from __future__ import annotations
 

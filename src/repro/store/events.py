@@ -30,9 +30,11 @@ import numpy as np
 from repro import checkpoint
 from repro.store import schema
 
-# the event vocabulary; "init" is always record 0
+# the event vocabulary; "init" is always record 0.  The node_* records
+# are schema v3 (node churn, repro.net.elastic) — older logs simply
+# never contain them.
 EVENTS = ("init", "add_task", "drop_task", "set_active", "set_coupling",
-          "run")
+          "run", "node_enter", "node_leave", "node_crash", "node_recover")
 
 
 class EventLog:
@@ -116,6 +118,27 @@ def replay(log: EventLog, upto: Optional[int] = None):
                               _nodes(rec))
         elif ev == "run":
             sess.run(int(rec["iters"]), record=bool(rec["record"]))
+        elif ev == "node_enter":
+            sess.node_enter(int(rec["node"]))
+        elif ev == "node_leave":
+            sess.node_leave(int(rec["node"]))
+        elif ev == "node_crash":
+            sess.node_crash(int(rec["node"]))
+        elif ev == "node_recover":
+            rows = rec.get("rows")
+            if rows is None:
+                sess.node_recover(int(rec["node"]))
+            else:
+                # the grafted snapshot rows are IN the record (broadcast
+                # to full state leaves — node_recover only reads its own
+                # node's row), so replay needs no side-channel store
+                from repro.core.dtsvm import DTSVMState
+                v = int(rec["node"])
+                sess.node_recover(v, from_state=DTSVMState(*(
+                    np.broadcast_to(
+                        np.asarray(rows[k], np.float32)[None],
+                        np.asarray(getattr(sess.state, k)).shape)
+                    for k in DTSVMState._fields)))
         else:
             raise ValueError(f"cannot replay event {ev!r}")
     return sess

@@ -23,6 +23,13 @@ version  contents
          accumulated device-side telemetry streams
          (``OnlineSession.telemetry_``), or None when telemetry was off.
          ``event_log`` records are unchanged.
+3        node churn (repro.net.elastic): ``online_session`` snapshots
+         gain a ``membership`` block (the node event list), and async
+         fabric states gain the ``silence`` (V, V) staleness clocks and
+         ``ef_resid`` error-feedback residuals.  ``event_log`` grows the
+         ``node_enter`` / ``node_leave`` / ``node_crash`` /
+         ``node_recover`` record kinds (old logs simply never contain
+         them — no record rewrite needed).
 =======  ==================================================================
 
 Writing a migration
@@ -46,7 +53,9 @@ from __future__ import annotations
 
 from typing import Any, Callable, Dict
 
-SCHEMA_VERSION = 2
+import numpy as np
+
+SCHEMA_VERSION = 3
 
 # from-version -> upgrader(tree) -> tree (with schema_version bumped)
 _MIGRATIONS: Dict[int, Callable[[dict], dict]] = {}
@@ -78,6 +87,28 @@ def _v1_to_v2(tree: dict) -> dict:
     if tree.get("kind") == "online_session":
         tree.setdefault("obs", None)
     tree["schema_version"] = 2
+    return tree
+
+
+@register_migration(2)
+def _v2_to_v3(tree: dict) -> dict:
+    """v2 -> v3: node churn.  ``online_session`` snapshots gain the
+    ``membership`` block (None — a pre-churn session never fired a node
+    event), and a stored async fabric state gains zeroed ``silence``
+    staleness clocks ((V, V), from the byte-counter shape) plus the
+    (1, 1, 1, 1) placeholder ``ef_resid`` — exactly the state a
+    pre-churn run would have produced, since nothing was ever silent
+    under the old semantics (no staleness policy) and error feedback
+    did not exist.  Event logs pass through untouched."""
+    if tree.get("kind") == "online_session":
+        tree.setdefault("membership", None)
+        net = tree.get("net")
+        if net is not None:
+            fst = net["fabric_state"]
+            V = np.asarray(fst["msgs_sent"]).shape[0]
+            fst.setdefault("silence", np.zeros((V, V), np.int32))
+            fst.setdefault("ef_resid", np.zeros((1, 1, 1, 1), np.float32))
+    tree["schema_version"] = 3
     return tree
 
 

@@ -10,11 +10,12 @@ mailboxes) and both dense and budgeted plans (tests/test_store.py).
 What is stored, and what is rebuilt:
 
 - stored   — the problem data (X, y, mask, adj), the config
-  (``SolverConfig.to_dict``), the membership masks, the ADMM state, the
-  iteration counter, the recorded history blocks, the fabric state
-  (mailboxes, delay rings, credit, counters, round) and per-round byte
-  series of async sessions, and the compiled plan's content
-  FINGERPRINT.
+  (``SolverConfig.to_dict``), the membership masks, the node-churn
+  event list (``repro.net.elastic``), the ADMM state, the iteration
+  counter, the recorded history blocks, the fabric state (mailboxes,
+  delay rings, credit, counters, staleness clocks, error-feedback
+  residuals, round) and per-round byte series of async sessions, and
+  the compiled plan's content FINGERPRINT.
 - rebuilt  — the plan's invariants (the K Gram blocks dominate a
   snapshot's would-be size) via a fresh ``compile_problem`` on restore;
   the engine's established invariant — a fresh build is bitwise equal
@@ -41,6 +42,7 @@ from repro.api.session import OnlineSession
 from repro.api.solvers import SolverConfig
 from repro.core import dtsvm as core
 from repro.engine import plan as engine_plan
+from repro.net import elastic as elastic_lib
 from repro.net import fabric as fabric_lib
 from repro.net import meter as meter_lib
 from repro.net.policies import NetConfig
@@ -93,6 +95,11 @@ def _snapshot_session(sess: OnlineSession) -> dict:
         "plan": plan,
         "net": net,
         "obs": obs,
+        # v3: node-churn events (repro.net.elastic) — the absolute-round
+        # list IS the membership state; restore replays it, so the
+        # staleness/EF arrays in the fabric state line up with it
+        "membership": (None if not sess._node_events
+                       else [e.to_dict() for e in sess._node_events]),
     })
 
 
@@ -154,6 +161,10 @@ def _restore_session(tree: Any, *, check_fingerprint: bool
     sess.iteration = int(tree["iteration"])
     sess.history = [np.asarray(h) for h in tree["history"]]
     sess._masks_dirty = bool(tree["masks_dirty"])
+    mem = tree.get("membership")
+    if mem is not None:
+        sess._node_events = [elastic_lib.MembershipEvent.from_dict(e)
+                             for e in mem]
 
     pl = tree["plan"]
     if pl is not None:

@@ -1,10 +1,31 @@
+import gc
 import os
 import sys
+
+import pytest
 
 # tests import repro from src/ and helpers from tests/
 _HERE = os.path.dirname(os.path.abspath(__file__))
 sys.path.insert(0, _HERE)
 sys.path.insert(0, os.path.join(os.path.dirname(_HERE), "src"))
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jit caches after each test module.
+
+    The full tier-1 run compiles 500+ XLA:CPU executables in one
+    process; keeping them all loaded can exhaust the JIT's executable
+    memory and segfault a LATER large compile (observed on the sweep
+    suite's interpret-mode Pallas scan, which passes in isolation).
+    Caches are per-module anyway — the compile-once contracts count
+    traces within a module (tests/test_analysis_retrace.py), never
+    across modules."""
+    yield
+    import jax
+
+    jax.clear_caches()
+    gc.collect()
 
 # NOTE: no XLA_FLAGS here — smoke tests and benches must see 1 device
 # (the 512-device override belongs to repro.launch.dryrun ONLY).

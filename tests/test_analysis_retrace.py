@@ -119,6 +119,45 @@ def test_serve_server_batches_share_bucket_compiles():
         srv.close()
 
 
+def test_async_membership_adds_zero_traces():
+    """Node churn rides the SAME traced round: membership events are
+    data (active-node masks in the scan xs), so a fit with crash /
+    recover / leave events traces plan_step exactly as often as the
+    event-free async fit — once — and builds the Gram once."""
+    from repro.net import Membership, MembershipEvent, NetConfig
+
+    X, y, mask, adj = _data()
+    net = NetConfig(schedule="partial:0.75", seed=0)
+    mem = Membership(events=(MembershipEvent(2, "crash", 1),
+                             MembershipEvent(4, "recover", 1),
+                             MembershipEvent(5, "leave", 0)))
+    with trace_counter("repro.kernels.ops:weighted_gram",
+                       "repro.engine.plan:plan_step") as c:
+        api.DTSVM(iters=8, qp_iters=2, net=net).fit(X, y, mask, adj)
+        assert c["plan_step"] == 1
+        api.DTSVM(iters=8, qp_iters=2, net=net).fit(
+            X, y, mask, adj, membership=mem)
+    assert c["weighted_gram"] == 2         # one build per fit, no more
+    assert c["plan_step"] == 2             # churn fit also traces once
+
+
+def test_error_feedback_adds_zero_traces_over_int8():
+    """Error-feedback compensation is a statically-gated branch of the
+    same exchange: turning it on over the int8 wire adds no plan_step
+    retrace and no extra Gram build relative to plain int8."""
+    from repro.net import LinkPolicy, NetConfig
+
+    X, y, mask, adj = _data()
+    for ef in (False, True):
+        net = NetConfig(policy=LinkPolicy(quant="int8"), seed=0,
+                        error_feedback=ef)
+        with trace_counter("repro.kernels.ops:weighted_gram",
+                           "repro.engine.plan:plan_step") as c:
+            api.DTSVM(iters=4, qp_iters=2, net=net).fit(X, y, mask, adj)
+        assert c["weighted_gram"] == 1, f"error_feedback={ef}"
+        assert c["plan_step"] == 1, f"error_feedback={ef}"
+
+
 def test_multi_engine_fit_traces_once():
     """The fused multi-iteration engine keeps the compile-once contract:
     one Gram build, one plan_step trace for the whole fit."""

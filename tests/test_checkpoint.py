@@ -72,9 +72,10 @@ def test_nested_structure_roundtrip(tmp_path):
 
 def test_namedtuple_flattens_to_tuple(tmp_path):
     from repro.net.fabric import FabricState
-    st = FabricState(*[np.float32(i) for i in range(9)])
+    n = len(FabricState._fields)
+    st = FabricState(*[np.float32(i) for i in range(n)])
     got = _roundtrip(tmp_path, {"st": st})["st"]
-    assert isinstance(got, tuple) and len(got) == 9
+    assert isinstance(got, tuple) and len(got) == n
     _leaves_equal(tuple(st), got)
 
 

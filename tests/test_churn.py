@@ -1,0 +1,461 @@
+"""Node churn: elastic membership, bounded staleness, error feedback.
+
+The contract ladder, from exact to statistical:
+
+1. The IDENTITY membership (no events, everyone alive) is the identity
+   fabric — bitwise the vmap/plan trajectory, states AND histories.
+2. Any membership run is SPLIT-INVARIANT: stopping mid-stream and
+   continuing (same fabric state, ``round0=``) — or saving/restoring
+   the whole session through ``repro.store`` — is bitwise one long run.
+3. Under RANDOM chaos schedules (crash/rejoin/straggle/drop sequences
+   over random graphs × masks × warm starts), surviving nodes keep
+   finite, learning states.
+
+The deterministic seeded sweeps below run everywhere; the
+hypothesis-powered generators deepen the same properties when the
+optional dep is installed (``pip install -e .[test]``).
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import OnlineSession, SolverConfig
+from repro.core import dtsvm as core
+from repro.core import graph
+from repro.data import synthetic
+from repro.engine import plan as engine_plan
+from repro.net import (LinkPolicy, Membership, MembershipEvent, NetConfig,
+                       build_fabric, elastic, run_async)
+from repro.store import session_store
+from repro.store.events import EventLog, replay
+
+
+def _problem(V=5, T=2, p=6, n=8, seed=0, graph_kind="random", degree=0.7,
+             active=None, couple=None):
+    n_train = np.full((V, T), n, int)
+    data = synthetic.make_multitask_data(V=V, T=T, p=p, n_train=n_train,
+                                         n_test=40, seed=seed)
+    A = graph.make_graph(graph_kind, V, degree=degree, seed=seed)
+    prob = core.make_problem(data["X"], data["y"], data["mask"], A, C=0.01,
+                             active=active, couple=couple)
+    return prob, data
+
+
+def _assert_states_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+def _random_membership(rng, V, rounds, n_events=4):
+    """A random-but-valid event schedule (the idempotent transition
+    rules make ANY kind/node/round sequence well-defined)."""
+    events = tuple(
+        MembershipEvent(round=int(rng.integers(0, rounds)),
+                        kind=elastic.KINDS[rng.integers(len(elastic.KINDS))],
+                        node=int(rng.integers(0, V)))
+        for _ in range(n_events))
+    return Membership(events=events)
+
+
+def _lossy_net(rng):
+    return NetConfig(
+        policy=LinkPolicy(drop=float(rng.uniform(0, 0.4)),
+                          quant=str(rng.choice(["float32", "int16", "int8"]))),
+        schedule="partial:0.8", seed=int(rng.integers(100)),
+        stale_limit=int(rng.integers(1, 5)))
+
+
+# ---------------------------------------------------------------------------
+# 1. identity: trivial membership is bitwise the vmap plan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("membership", [
+    Membership(),
+    Membership(initial=(0, 0, 0, 0, 0)),
+])
+def test_trivial_membership_is_bitwise_vmap(membership):
+    prob, data = _problem()
+    V = prob.X.shape[0]
+    Xte = np.broadcast_to(data["X_test"][None], (V,) + data["X_test"].shape)
+    yte = np.broadcast_to(data["y_test"][None], (V,) + data["y_test"].shape)
+    ev = lambda st: core.risks(st.r, Xte, yte)  # noqa: E731
+    plan = engine_plan.compile_problem(prob, qp_iters=40)
+    st_ref, hist_ref = plan.run(iters=6, eval_fn=ev)
+    res = run_async(prob, 6, net=NetConfig(), qp_iters=40, eval_fn=ev,
+                    membership=membership)
+    assert res.fabric.mode == "buffer"       # still the identity fast path
+    _assert_states_equal(st_ref, res.state)
+    np.testing.assert_array_equal(np.asarray(hist_ref),
+                                  np.asarray(res.history))
+
+
+def test_nontrivial_membership_forces_mailbox_and_diverges():
+    prob, _ = _problem()
+    mem = Membership(events=(MembershipEvent(1, "crash", 0),))
+    res = run_async(prob, 6, net=NetConfig(), qp_iters=40, membership=mem)
+    assert res.fabric.mode == "mailbox"
+    ref = run_async(prob, 6, net=NetConfig(), qp_iters=40)
+    assert not np.array_equal(np.asarray(ref.state.r),
+                              np.asarray(res.state.r))
+
+
+# ---------------------------------------------------------------------------
+# 2. membership mask semantics
+# ---------------------------------------------------------------------------
+def test_masks_event_semantics_and_idempotence():
+    mem = Membership(events=(
+        MembershipEvent(2, "crash", 1),
+        MembershipEvent(3, "crash", 1),      # crash a corpse: no-op
+        MembershipEvent(4, "recover", 1),    # fill fires
+        MembershipEvent(5, "enter", 1),      # enter a live node: no-op
+        MembershipEvent(6, "leave", 0),      # gc fires (was alive)
+        MembershipEvent(7, "leave", 2),
+    ))
+    m = mem.masks(3, 10)
+    # alive: node 1 down rounds [2, 4), up after; node 0 gone from 6
+    np.testing.assert_array_equal(m["alive"][:, 1],
+                                  [1, 1, 0, 0, 1, 1, 1, 1, 1, 1])
+    np.testing.assert_array_equal(m["alive"][:, 0],
+                                  [1, 1, 1, 1, 1, 1, 0, 0, 0, 0])
+    # crash never GCs; leave of a live node does
+    assert not m["gc"][:, 1].any()
+    assert m["gc"][6, 0] and m["gc"][7, 2]
+    # fill fires exactly once, at the recover round
+    np.testing.assert_array_equal(np.nonzero(m["fill"][:, 1])[0], [4])
+    # gone tracks graceful leavers only
+    assert m["gone"][6:, 0].all() and not m["gone"][:6, 0].any()
+    assert not m["gone"][:, 1].any()
+
+
+def test_masks_are_continuation_safe():
+    rng = np.random.default_rng(7)
+    mem = _random_membership(rng, V=4, rounds=12, n_events=6)
+    full = mem.masks(4, 12)
+    for k in (1, 5, 9):
+        tail = mem.masks(4, 12 - k, round0=k)
+        for key in full:
+            np.testing.assert_array_equal(full[key][k:], tail[key],
+                                          err_msg=f"{key} at split {k}")
+
+
+def test_event_validation():
+    with pytest.raises(ValueError, match="unknown membership kind"):
+        MembershipEvent(0, "explode", 1)
+    with pytest.raises(ValueError, match="round"):
+        MembershipEvent(-1, "crash", 1)
+    with pytest.raises(ValueError, match="out of range"):
+        Membership(events=(MembershipEvent(0, "crash", 9),)).masks(3, 4)
+    with pytest.raises(ValueError, match="stale_limit"):
+        NetConfig(stale_limit=-1)
+    with pytest.raises(ValueError, match="zero-delay"):
+        prob, _ = _problem()
+        run_async(prob, 2, net=NetConfig(
+            policy=LinkPolicy(quant="int8", delay=1), error_feedback=True))
+
+
+def test_membership_requires_mailbox_fabric():
+    prob, _ = _problem()
+    fab = build_fabric(prob, NetConfig())
+    assert fab.mode == "buffer"
+    mem = Membership(events=(MembershipEvent(0, "crash", 0),))
+    with pytest.raises(ValueError, match="mailbox"):
+        run_async(prob, 2, net=NetConfig(), fabric=fab, membership=mem)
+
+
+def test_metropolis_alive_subgraph_doubly_stochastic():
+    A = graph.make_graph("random", 6, degree=0.7, seed=3)
+    alive = np.array([1, 1, 0, 1, 1, 0], np.float32)
+    W = elastic.metropolis(A, alive)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-6)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-6)
+    np.testing.assert_array_equal(W, W.T)
+    # dead nodes are exact fixed points: weight-1 self loops
+    for v in (2, 5):
+        assert W[v, v] == 1.0
+        assert np.count_nonzero(W[v]) == 1
+
+
+def test_epochs_enumerate_distinct_alive_masks():
+    mem = Membership(events=(MembershipEvent(3, "crash", 1),
+                             MembershipEvent(6, "recover", 1)))
+    eps = mem.epochs(3, 10)
+    assert [e[0] for e in eps] == [0, 3, 6]
+    np.testing.assert_array_equal(eps[1][1], [1, 0, 1])
+
+
+# ---------------------------------------------------------------------------
+# 3. crash vs leave: bytes and staleness
+# ---------------------------------------------------------------------------
+def test_crash_wastes_bytes_leave_withdraws_links():
+    prob, _ = _problem(graph_kind="full")
+    net = NetConfig(seed=0)
+    crash = run_async(prob, 8, net=net, membership=Membership(
+        events=(MembershipEvent(3, "crash", 1),)))
+    leave = run_async(prob, 8, net=net, membership=Membership(
+        events=(MembershipEvent(3, "leave", 1),)))
+    into_crashed = np.asarray(crash.report["bytes_per_edge"])[1].sum()
+    into_left = np.asarray(leave.report["bytes_per_edge"])[1].sum()
+    # neighbors keep paying into a crashed node's mailbox; a graceful
+    # leaver's links are withdrawn the moment it leaves
+    assert into_crashed > into_left > 0
+
+
+def test_staleness_clock_ages_out_crashed_neighbor():
+    prob, _ = _problem(graph_kind="full")
+    mem = Membership(events=(MembershipEvent(2, "crash", 1),))
+    res = run_async(prob, 8, net=NetConfig(stale_limit=2), membership=mem)
+    silence = np.asarray(res.fabric_state.silence)
+    adj = np.asarray(res.fabric.adj)
+    # every edge FROM the dead node has been silent since round 2
+    assert (silence[:, 1][adj[:, 1]] >= 5).all()
+    assert res.report["max_silence"] >= 5
+    assert res.report["stale_edges"] >= np.count_nonzero(adj[:, 1])
+    assert res.report["stale_limit"] == 2
+    assert np.isfinite(np.asarray(res.state.r)).all()
+
+
+def test_stale_limit_none_keeps_pr4_reduce_bitwise():
+    # adjf * (silence <= huge) multiplies by exactly 1.0 — the gated
+    # reduce with an unreachable bound must equal the ungated one
+    prob, _ = _problem()
+    lossy = dict(policy=LinkPolicy(drop=0.3, quant="int16"),
+                 schedule="partial:0.7", seed=4)
+    a = run_async(prob, 8, net=NetConfig(**lossy), qp_iters=40)
+    b = run_async(prob, 8, net=NetConfig(**lossy, stale_limit=10 ** 6),
+                  qp_iters=40)
+    _assert_states_equal(a.state, b.state)
+
+
+def test_warmfill_on_recover_is_metered():
+    prob, _ = _problem(graph_kind="full")
+    base = run_async(prob, 8, net=NetConfig(warm_fill=False))
+    mem = Membership(events=(MembershipEvent(2, "crash", 1),
+                             MembershipEvent(5, "recover", 1)))
+    res = run_async(prob, 8, net=NetConfig(warm_fill=False), membership=mem)
+    T = prob.X.shape[1]
+    deg = int(np.asarray(prob.adj)[1].sum())
+    # recover warm-fills both directions of every incident edge
+    assert (res.report["warmfill_msgs"] - base.report["warmfill_msgs"]
+            == pytest.approx(2 * deg * T))
+
+
+# ---------------------------------------------------------------------------
+# 4. error-feedback compression
+# ---------------------------------------------------------------------------
+def test_error_feedback_same_bytes_better_consensus():
+    prob, _ = _problem(seed=1)
+    exact = run_async(prob, 20, net=NetConfig(
+        policy=LinkPolicy(), schedule="full", seed=0), qp_iters=40)
+    kw = dict(policy=LinkPolicy(quant="int8"), schedule="full", seed=0)
+    plain = run_async(prob, 20, net=NetConfig(**kw), qp_iters=40)
+    ef = run_async(prob, 20, net=NetConfig(**kw, error_feedback=True),
+                   qp_iters=40)
+    # identical wire traffic...
+    assert ef.report["bytes_sent"] == pytest.approx(
+        plain.report["bytes_sent"])
+    assert ef.report["msgs_sent"] == pytest.approx(plain.report["msgs_sent"])
+    # ...and the residual-compensated trajectory tracks the exact one
+    # more closely than plain quantization
+    ref = np.asarray(exact.state.r)
+    err_plain = np.linalg.norm(np.asarray(plain.state.r) - ref)
+    err_ef = np.linalg.norm(np.asarray(ef.state.r) - ref)
+    assert err_ef < err_plain
+
+
+def test_error_feedback_is_split_invariant():
+    prob, _ = _problem(seed=2)
+    net = NetConfig(policy=LinkPolicy(quant="int8", drop=0.2),
+                    schedule="partial:0.8", seed=1, error_feedback=True)
+    full = run_async(prob, 8, net=net, qp_iters=30)
+    r1 = run_async(prob, 3, net=net, qp_iters=30)
+    r2 = run_async(prob, 5, net=net, qp_iters=30, fabric=r1.fabric,
+                   fabric_state=r1.fabric_state, state=r1.state, round0=3)
+    _assert_states_equal(full.state, r2.state)
+    np.testing.assert_array_equal(np.asarray(full.fabric_state.ef_resid),
+                                  np.asarray(r2.fabric_state.ef_resid))
+
+
+def test_error_feedback_off_keeps_placeholder_residual():
+    prob, _ = _problem()
+    res = run_async(prob, 4, net=NetConfig(
+        policy=LinkPolicy(quant="int8"), seed=0), qp_iters=30)
+    assert np.asarray(res.fabric_state.ef_resid).shape == (1, 1, 1, 1)
+    assert not np.asarray(res.fabric_state.ef_resid).any()
+
+
+# ---------------------------------------------------------------------------
+# 5. deterministic chaos sweeps (the hypothesis suite's fixed core)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("case_seed", [0, 1, 2, 3])
+def test_chaos_schedule_survivors_stay_finite(case_seed):
+    rng = np.random.default_rng(case_seed)
+    V = int(rng.integers(4, 7))
+    active = np.ones((V, 2), np.float32)
+    if rng.random() < 0.5:
+        active[int(rng.integers(V)), int(rng.integers(2))] = 0.0
+    prob, _ = _problem(V=V, seed=case_seed,
+                       graph_kind=str(rng.choice(["ring", "full", "random"])),
+                       active=active)
+    net = _lossy_net(rng)
+    mem = _random_membership(rng, V, rounds=10)
+    warm = None
+    if rng.random() < 0.5:                   # warm start from a short run
+        warm = run_async(prob, 2, qp_iters=20).state
+    res = run_async(prob, 10, net=net, membership=mem, qp_iters=20,
+                    state=warm)
+    for leaf in jax.tree.leaves(res.state):
+        assert np.isfinite(np.asarray(leaf)).all()
+    # staleness clocks only count graph edges
+    assert (np.asarray(res.fabric_state.silence)[
+        ~np.asarray(res.fabric.adj)] == 0).all()
+
+
+@pytest.mark.parametrize("case_seed", [0, 1])
+def test_chaos_schedule_split_invariant(case_seed):
+    rng = np.random.default_rng(100 + case_seed)
+    prob, _ = _problem(V=5, seed=case_seed)
+    net = _lossy_net(rng)
+    d = net.to_dict()
+    d["error_feedback"] = (net.policy.quant != "float32"
+                           and bool(rng.integers(2)))
+    net = NetConfig.from_dict(d)
+    mem = _random_membership(rng, 5, rounds=10)
+    full = run_async(prob, 10, net=net, membership=mem, qp_iters=20)
+    k = int(rng.integers(1, 10))
+    r1 = run_async(prob, k, net=net, membership=mem, qp_iters=20)
+    r2 = run_async(prob, 10 - k, net=net, membership=mem, qp_iters=20,
+                   fabric=r1.fabric, fabric_state=r1.fabric_state,
+                   state=r1.state, round0=k)
+    _assert_states_equal(full.state, r2.state)
+
+
+def test_churn_converges_toward_consensus():
+    # a crash + recover mid-run must not keep survivors from learning:
+    # final risks under churn stay comparable to the fault-free run
+    prob, data = _problem(V=4, n=12, seed=5, graph_kind="full")
+    V = prob.X.shape[0]
+    Xte = np.broadcast_to(data["X_test"][None], (V,) + data["X_test"].shape)
+    yte = np.broadcast_to(data["y_test"][None], (V,) + data["y_test"].shape)
+    net = NetConfig(stale_limit=3, seed=0)
+    mem = Membership(events=(MembershipEvent(5, "crash", 2),
+                             MembershipEvent(12, "recover", 2)))
+    res = run_async(prob, 25, net=net, membership=mem, qp_iters=60)
+    base = run_async(prob, 25, net=NetConfig(seed=0), qp_iters=60)
+    r_churn = np.asarray(core.risks(res.state.r, Xte, yte))
+    r_base = np.asarray(core.risks(base.state.r, Xte, yte))
+    assert r_churn.mean() <= r_base.mean() + 0.1
+
+
+# ---------------------------------------------------------------------------
+# 6. session: crash -> snapshot-recover -> continue, bitwise
+# ---------------------------------------------------------------------------
+def _churn_session_cfg():
+    return SolverConfig(net=NetConfig(
+        policy=LinkPolicy(drop=0.15, quant="int8"), schedule="partial:0.8",
+        seed=5, stale_limit=3), qp_iters=30)
+
+
+def test_session_crash_recover_continue_bitwise():
+    prob_args = _problem(V=4, seed=3)
+    data = prob_args[1]
+    A = np.asarray(prob_args[0].adj)
+    cfg = _churn_session_cfg()
+    make = lambda **kw: OnlineSession(  # noqa: E731
+        data["X"], data["y"], mask=data["mask"], adj=A, config=cfg, **kw)
+
+    log = EventLog()
+    sa = make(log=log)
+    sa.run(5); sa.node_crash(2); sa.run(5); sa.node_recover(2); sa.run(5)
+
+    # same trajectory with a save/restore cycle while the node is down
+    sb = make()
+    sb.run(5); sb.node_crash(2); sb.run(5)
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "s.msgpack")
+        session_store.save_session(path, sb)
+        sb2 = session_store.load_session(path)
+    sb2.node_recover(2); sb2.run(5)
+    _assert_states_equal(sa.state, sb2.state)
+    np.testing.assert_array_equal(
+        np.asarray(sa._net_state.silence), np.asarray(sb2._net_state.silence))
+
+    # and the event log replays the whole churn history bitwise
+    twin = replay(log)
+    _assert_states_equal(sa.state, twin.state)
+    assert twin.node_status["events"] == sa.node_status["events"]
+
+
+def test_session_recover_from_snapshot_state_replays():
+    prob_args = _problem(V=4, seed=4)
+    data = prob_args[1]
+    A = np.asarray(prob_args[0].adj)
+    log = EventLog()
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"], adj=A,
+                         config=_churn_session_cfg(), log=log)
+    sess.run(4)
+    checkpointed = sess.state            # the node's last durable state
+    sess.node_crash(1)
+    sess.run(4)
+    sess.node_recover(1, from_state=checkpointed)
+    # the grafted row IS the checkpointed one
+    np.testing.assert_array_equal(np.asarray(sess.state.r)[1],
+                                  np.asarray(checkpointed.r)[1])
+    sess.run(4)
+    twin = replay(log)
+    _assert_states_equal(sess.state, twin.state)
+
+
+def test_node_events_require_async_backend():
+    prob_args = _problem(V=3, seed=0)
+    data = prob_args[1]
+    sess = OnlineSession(data["X"], data["y"], mask=data["mask"],
+                         adj=np.asarray(prob_args[0].adj))
+    with pytest.raises(ValueError, match="fabric feature"):
+        sess.node_crash(0)
+
+
+# ---------------------------------------------------------------------------
+# 7. hypothesis chaos harness (optional dep; gated, never skipped in CI
+#    images that install the test extras)
+# ---------------------------------------------------------------------------
+def test_chaos_property_hypothesis():
+    hyp = pytest.importorskip(
+        "hypothesis", reason="optional test dep (pip install -e .[test])")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    events = st.lists(
+        st.tuples(st.integers(0, 9), st.sampled_from(elastic.KINDS),
+                  st.integers(0, 4)),
+        min_size=0, max_size=6)
+
+    @hyp.given(evs=events, seed=st.integers(0, 50),
+               drop=st.floats(0, 0.5), stale=st.one_of(
+                   st.none(), st.integers(0, 4)),
+               quant=st.sampled_from(["float32", "int8"]),
+               ef=st.booleans(), split=st.integers(1, 9))
+    @hyp.settings(max_examples=15, deadline=None)
+    def run(evs, seed, drop, stale, quant, ef, split):
+        prob, _ = _problem(V=5, seed=seed % 5)
+        mem = Membership(events=tuple(
+            MembershipEvent(r, k, v) for r, k, v in evs))
+        net = NetConfig(policy=LinkPolicy(drop=drop, quant=quant),
+                        schedule="partial:0.8", seed=seed,
+                        stale_limit=stale,
+                        error_feedback=ef and quant == "int8")
+        full = run_async(prob, 10, net=net, membership=mem, qp_iters=15)
+        for leaf in jax.tree.leaves(full.state):
+            assert np.isfinite(np.asarray(leaf)).all()
+        if mem.is_trivial and net.is_identity:
+            ref, _ = engine_plan.compile_problem(prob, qp_iters=15).run(
+                iters=10)
+            _assert_states_equal(ref, full.state)
+        r1 = run_async(prob, split, net=net, membership=mem, qp_iters=15)
+        r2 = run_async(prob, 10 - split, net=net, membership=mem,
+                       qp_iters=15, fabric=r1.fabric,
+                       fabric_state=r1.fabric_state, state=r1.state,
+                       round0=split)
+        _assert_states_equal(full.state, r2.state)
+
+    run()

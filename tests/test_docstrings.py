@@ -21,6 +21,7 @@ import repro.api.evaluate
 import repro.api.session
 import repro.api.solvers
 import repro.api.sweep
+import repro.net.elastic
 import repro.obs
 import repro.obs.registry
 import repro.obs.spans
@@ -49,6 +50,7 @@ MODULES = [
     repro.api.session,
     repro.api.solvers,
     repro.api.sweep,
+    repro.net.elastic,
     repro.obs,
     repro.obs.registry,
     repro.obs.spans,

@@ -41,6 +41,7 @@ FIG5_REGIME = dict(pos_fracs=(2 / 12, 4 / 12), seeds=(0,), iters=10,
 FIG6_REGIME = dict(seeds=(0,), iters=10, V=6, n_tgt=4, n_src=80,
                    n_test=300)
 FIG7_REGIME = dict(stage_iters=4, seed=0, n_test=300, qp_iters=40)
+FIG7_CHURN_REGIME = dict(stage_iters=4, seed=0, n_test=300, qp_iters=40)
 
 
 def _fig2_outputs():
@@ -100,12 +101,23 @@ def _fig7_outputs():
     return {name: np.asarray(v).tolist() for name, v in marks.items()}
 
 
+def _fig7_churn_outputs():
+    # the node-churn variant: crash/recover/leave over the lossy async
+    # fabric (int8 + error feedback, stale_limit=3), replay-audited
+    # through the same EventLog before any value is pinned
+    import fig7_online
+    r = dict(FIG7_CHURN_REGIME)
+    marks, _ = fig7_online.churn_marks(r.pop("stage_iters"), **r)
+    return {name: np.asarray(v).tolist() for name, v in marks.items()}
+
+
 _FIGS = {"fig2": (_fig2_outputs, FIG2_REGIME),
          "fig3": (_fig3_outputs, FIG3_REGIME),
          "fig4": (_fig4_outputs, FIG4_REGIME),
          "fig5": (_fig5_outputs, FIG5_REGIME),
          "fig6": (_fig6_outputs, FIG6_REGIME),
-         "fig7": (_fig7_outputs, FIG7_REGIME)}
+         "fig7": (_fig7_outputs, FIG7_REGIME),
+         "fig7_churn": (_fig7_churn_outputs, FIG7_CHURN_REGIME)}
 
 
 def _load(name):

@@ -71,12 +71,19 @@ def _assert_sessions_equal(a, b):
 _LOSSY = NetConfig(policy=LinkPolicy(drop=0.25, delay=1, quant="int16"),
                    schedule="partial:0.75", seed=3)
 
+_CHURN = NetConfig(policy=LinkPolicy(drop=0.2, quant="int8"),
+                   schedule="partial:0.75", seed=3, stale_limit=2,
+                   error_feedback=True)
+
 CONFIGS = {
     "vmap-dense": SolverConfig(iters=3, qp_iters=15),
     "vmap-budgeted": SolverConfig(iters=3, qp_iters=15,
                                   budget=PlanBudget(max_elems=256)),
     "async-identity": SolverConfig(iters=3, qp_iters=15, net=NetConfig()),
     "async-lossy": SolverConfig(iters=3, qp_iters=15, net=_LOSSY),
+    # schema v3 surface: staleness clocks + error-feedback residuals
+    # live in the fabric state and must round-trip bitwise too
+    "async-stale-ef": SolverConfig(iters=3, qp_iters=15, net=_CHURN),
 }
 
 
@@ -293,6 +300,120 @@ def test_schema_migration_hook_chains():
         _assert_sessions_equal(back, sess)
     finally:
         schema_lib._MIGRATIONS.pop(0)
+
+
+# ---------------------------------------------------------------------------
+# schema v3: node churn (membership list, staleness clocks, EF residuals)
+# ---------------------------------------------------------------------------
+def _downgrade(tree, to_version):
+    """The inverse of the v2/v3 migrations: produce the dict an OLD
+    writer would have emitted, so the registered upgraders are
+    exercised on realistic input."""
+    tree = dict(tree)
+    tree["net"] = None if tree["net"] is None else dict(tree["net"])
+    if to_version <= 2:                       # strip the v3 additions
+        tree.pop("membership", None)
+        if tree["net"] is not None:
+            fst = dict(tree["net"]["fabric_state"])
+            fst.pop("silence", None)
+            fst.pop("ef_resid", None)
+            tree["net"]["fabric_state"] = fst
+    if to_version <= 1:                       # strip the v2 addition
+        tree.pop("obs", None)
+    tree["schema_version"] = to_version
+    return tree
+
+
+@pytest.mark.parametrize("old_version", [1, 2])
+def test_old_snapshot_migrates_to_v3_and_continues(tmp_path, old_version):
+    """v1/v2 -> v3 migration chain: a pre-churn async snapshot loads,
+    gains zeroed staleness clocks / placeholder EF residuals, and
+    continues bitwise (stale_limit=None never reads the clocks)."""
+    cfg = CONFIGS["async-lossy"]              # pre-churn net semantics
+    ref = _session(cfg)
+    ref.run(3)
+    old = _downgrade(snapshot_session(ref), old_version)
+    path = os.path.join(str(tmp_path), "old.msgpack")
+    checkpoint.save(path, old)
+    back = load_session(path)
+    # the migrated fabric state starts with pristine churn fields —
+    # exactly what the old semantics (nothing ever aged out) imply
+    assert not np.asarray(back._net_state.silence).any()
+    assert np.asarray(back._net_state.ef_resid).shape == (1, 1, 1, 1)
+    assert back._node_events == []
+    # silence diverges from the uninterrupted run (the old writer never
+    # tracked it) but the MODEL trajectory must not: continue both and
+    # compare everything except the diagnostic clock
+    back.run(3)
+    ref.run(3)
+    la = {k: v for k, v in zip(type(ref._net_state)._fields,
+                               ref._net_state)}
+    lb = {k: v for k, v in zip(type(back._net_state)._fields,
+                               back._net_state)}
+    for x, z in zip(jax.tree_util.tree_leaves(ref.state),
+                    jax.tree_util.tree_leaves(back.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(z))
+    for k in la:
+        if k == "silence":
+            continue
+        np.testing.assert_array_equal(np.asarray(la[k]), np.asarray(lb[k]),
+                                      err_msg=f"fabric field {k}")
+
+
+def test_churn_session_snapshot_roundtrip_bitwise(tmp_path):
+    """The v3 payload proper: a session with node events round-trips
+    with its membership list, staleness clocks and EF residuals, and
+    continues bitwise through a crash/recover window."""
+    cfg = CONFIGS["async-stale-ef"]
+    ref = _session(cfg)
+    ref.run(3)
+    ref.node_crash(1)
+    ref.run(3)
+
+    twin = _session(cfg)
+    twin.run(3)
+    twin.node_crash(1)
+    path = os.path.join(str(tmp_path), "churn.msgpack")
+    save_session(path, twin)
+    back = load_session(path)
+    assert [e.to_dict() for e in back._node_events] == \
+        [e.to_dict() for e in twin._node_events]
+    back.run(3)
+    _assert_sessions_equal(back, ref)
+    np.testing.assert_array_equal(np.asarray(back._net_state.silence),
+                                  np.asarray(ref._net_state.silence))
+    np.testing.assert_array_equal(np.asarray(back._net_state.ef_resid),
+                                  np.asarray(ref._net_state.ef_resid))
+
+    # ...and recovery continues bitwise across another round trip
+    ref.node_recover(1)
+    ref.run(2)
+    back.node_recover(1)
+    save_session(path, back)
+    back2 = load_session(path)
+    back2.run(2)
+    _assert_sessions_equal(back2, ref)
+
+
+def test_node_event_log_replays_churn(tmp_path):
+    """node_* records replay, including recover-from-snapshot rows
+    embedded in the log record."""
+    cfg = CONFIGS["async-stale-ef"]
+    log = EventLog()
+    sess = _session(cfg, log=log)
+    sess.run(2)
+    ckpt = sess.state
+    sess.node_crash(2)
+    sess.run(2)
+    sess.node_recover(2, from_state=ckpt)
+    sess.run(2)
+    sess.node_leave(0)
+    sess.run(2)
+    path = os.path.join(str(tmp_path), "churn.events")
+    log.save(path)
+    twin = replay(EventLog.load(path))
+    _assert_sessions_equal(twin, sess)
+    assert twin.node_status["events"] == sess.node_status["events"]
 
 
 def test_config_roundtrip_exact():
